@@ -1,0 +1,89 @@
+"""Shared FL-experiment harness for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.obcsaa import OBCSAAConfig
+from repro.data import load_mnist, partition_workers
+from repro.fl import FederatedTrainer, FLConfig
+from repro.models.mlp_mnist import (init_mlp_mnist, mlp_mnist_accuracy,
+                                    mlp_mnist_loss)
+
+_CACHE = {}
+
+
+def mnist_setup(U=10, K=3000, seed=0, n_eval=2000):
+    key = (U, K, seed, n_eval)
+    if key in _CACHE:
+        return _CACHE[key]
+    xtr, ytr, xte, yte = load_mnist()
+    wx, wy = partition_workers(xtr, ytr, U, K, seed=seed)
+    worker_data = {"x": jnp.asarray(wx), "y": jnp.asarray(wy)}
+    params0 = init_mlp_mnist(jax.random.PRNGKey(0))
+    xe, ye = jnp.asarray(xte[:n_eval]), jnp.asarray(yte[:n_eval])
+
+    @jax.jit
+    def eval_fn(p):
+        return mlp_mnist_loss(p, xe, ye), mlp_mnist_accuracy(p, xe, ye)
+
+    def loss_fn(p, data):
+        return mlp_mnist_loss(p, data["x"], data["y"])
+
+    out = (worker_data, params0, eval_fn, loss_fn)
+    _CACHE[key] = out
+    return out
+
+
+def run_fl(agg: str, *, rounds=120, U=10, K=3000, scheduler="all",
+           obcsaa: OBCSAAConfig = None, topk_dense=1000, eval_every=20,
+           seed=0) -> Dict:
+    worker_data, params0, eval_fn, loss_fn = mnist_setup(U=U, K=K)
+    cfg = FLConfig(aggregator=agg, scheduler=scheduler, rounds=rounds,
+                   eval_every=eval_every, seed=seed,
+                   obcsaa=obcsaa or OBCSAAConfig(chunk=4096, measure=1024,
+                                                 topk=80, biht_iters=25),
+                   topk_dense=topk_dense)
+    tr = FederatedTrainer(cfg, loss_fn, params0, worker_data,
+                          np.full(U, float(K)), eval_fn=eval_fn)
+    t0 = time.time()
+    logs = tr.run()
+    wall = time.time() - t0
+    return {"logs": logs, "wall_s": wall,
+            "final_loss": logs[-1].loss, "final_acc": logs[-1].accuracy,
+            "us_per_round": 1e6 * wall / rounds}
+
+
+def emit(rows: List[tuple]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# --- suite-level result cache (figures are expensive on CPU; the final
+# ``python -m benchmarks.run | tee bench_output.txt`` replays from cache) ---
+
+import json
+from pathlib import Path
+
+CACHE_PATH = Path(__file__).resolve().parents[1] / "experiments" / \
+    "bench_cache.json"
+
+
+def cached_suite(key: str, fn):
+    """Run fn() -> rows once; replay from experiments/bench_cache.json."""
+    cache = {}
+    if CACHE_PATH.exists():
+        cache = json.loads(CACHE_PATH.read_text())
+    if key in cache:
+        rows = [tuple(r) for r in cache[key]]
+        emit(rows)
+        return rows
+    rows = fn()
+    cache[key] = [list(r) for r in rows]
+    CACHE_PATH.parent.mkdir(parents=True, exist_ok=True)
+    CACHE_PATH.write_text(json.dumps(cache, indent=1))
+    return rows

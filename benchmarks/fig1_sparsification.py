@@ -1,0 +1,29 @@
+"""Paper Fig. 1: OBCSAA under different sparsification levels κ vs perfect
+aggregation. Sweeps per-chunk κ_c at fixed S_c (paper: κ ∈ {10..1000},
+S=10000, D=50890; here the equivalent per-chunk budgets)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_fl
+from repro.core.obcsaa import OBCSAAConfig
+
+# per-chunk κ_c equivalents of the paper's κ over D=50890 with 13 chunks
+KAPPAS = [8, 26, 80, 160]       # ≈ paper κ = 100, 330, 1000, 2000
+ROUNDS = 120
+
+
+def main(rounds=ROUNDS):
+    rows = []
+    r = run_fl("perfect", rounds=rounds)
+    rows.append(("fig1/perfect", r["us_per_round"],
+                 f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f}"))
+    for k in KAPPAS:
+        ob = OBCSAAConfig(chunk=4096, measure=1024, topk=k, biht_iters=25)
+        r = run_fl("obcsaa", rounds=rounds, obcsaa=ob)
+        rows.append((f"fig1/obcsaa_kappa{k}x13", r["us_per_round"],
+                     f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Fig. 4: impact of samples-per-worker K̄ (performance saturates)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_fl
+from repro.core.obcsaa import OBCSAAConfig
+
+KBARS = [300, 1000, 3000]
+ROUNDS = 100
+
+
+def main(rounds=ROUNDS):
+    rows = []
+    for K in KBARS:
+        ob = OBCSAAConfig(chunk=4096, measure=1024, topk=80, biht_iters=25)
+        r = run_fl("obcsaa", rounds=rounds, K=K, obcsaa=ob)
+        rows.append((f"fig4/obcsaa_K{K}", r["us_per_round"],
+                     f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

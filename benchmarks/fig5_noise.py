@@ -1,0 +1,26 @@
+"""Paper Fig. 5: impact of AWGN variance σ² (SNR sweep)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_fl
+from repro.core.obcsaa import OBCSAAConfig
+
+NOISE_VARS = [1e-6, 1e-4, 1e-2, 1.0]
+ROUNDS = 100
+
+
+def main(rounds=ROUNDS):
+    rows = []
+    for nv in NOISE_VARS:
+        ob = OBCSAAConfig(chunk=4096, measure=1024, topk=80, biht_iters=25,
+                          noise_var=nv)
+        r = run_fl("obcsaa", rounds=rounds, obcsaa=ob)
+        snr_db = 10 * __import__("math").log10(10.0 / nv)
+        rows.append((f"fig5/obcsaa_noise{nv:g}", r["us_per_round"],
+                     f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f};"
+                     f"snr={snr_db:.0f}dB"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Microbenchmarks of the OBCSAA compression pipeline (jnp path on CPU;
+the Pallas kernels are structural/TPU-targeted and validated in tests)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.obcsaa import OBCSAAConfig, compress_chunks, reconstruct_chunks
+
+
+def timeit(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def main():
+    rows = []
+    for D in (1 << 16, 1 << 20):
+        cfg = OBCSAAConfig(chunk=4096, measure=1024, topk=409, biht_iters=10)
+        g = jax.random.normal(jax.random.PRNGKey(0), (D,))
+        comp = jax.jit(lambda g: compress_chunks(cfg, g))
+        us = timeit(comp, g)
+        rows.append((f"kernels/compress_D{D}", us,
+                     f"ratio={D / (D // cfg.chunk * cfg.measure):.2f}"))
+        signs, mags = comp(g)
+        rec = jax.jit(lambda y, m: reconstruct_chunks(cfg, y, m))
+        us = timeit(rec, signs, mags)
+        rows.append((f"kernels/biht10_D{D}", us, ""))
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline from the dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.roofline import DRYRUN_DIR, analyze
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "tables.md"
+
+
+def load(arch, shape, mesh_tag, aggs=("obcsaa", "mean")):
+    for agg in aggs:
+        p = DRYRUN_DIR / f"{arch}__{shape}__{mesh_tag}__{agg}.json"
+        if p.exists():
+            return json.loads(p.read_text())
+    return None
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table() -> str:
+    lines = ["| arch | shape | mesh | status | temp/dev | HLO GFLOPs/dev | "
+             "coll wire/dev | compile |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in ASSIGNED_ARCHS:
+        for shape in INPUT_SHAPES:
+            for tag in ("single", "multi"):
+                rec = load(arch, shape, tag)
+                if rec is None:
+                    lines.append(f"| {arch} | {shape} | {tag} | MISSING | "
+                                 "| | | |")
+                    continue
+                if rec["status"] == "skipped":
+                    lines.append(f"| {arch} | {shape} | {tag} | skipped "
+                                 f"(sub-quadratic rule) | | | | |")
+                    continue
+                if rec["status"] == "error":
+                    lines.append(f"| {arch} | {shape} | {tag} | ERROR: "
+                                 f"{rec['error'][:60]} | | | | |")
+                    continue
+                m = rec["memory"]
+                c = rec["collectives"]
+                lines.append(
+                    f"| {arch} | {shape} | {tag} | ok | "
+                    f"{fmt_bytes(m['temp_bytes'])} | "
+                    f"{rec['cost'].get('flops', 0)/1e9:.1f} | "
+                    f"{fmt_bytes(c.get('total_wire_bytes', c['total_bytes']))} | "
+                    f"{rec['compile_s']}s |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = ["| arch | shape | compute(s) | memory(s) | collective(s) | "
+             "bottleneck | useful ratio | bound step(s) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in ASSIGNED_ARCHS:
+        for shape in INPUT_SHAPES:
+            rec = load(arch, shape, "single")
+            if rec is None or rec["status"] != "ok":
+                status = "-" if rec is None else rec["status"]
+                lines.append(f"| {arch} | {shape} | - | - | - | {status} | "
+                             "- | - |")
+                continue
+            a = analyze(rec)
+            lines.append(
+                f"| {arch} | {shape} | {a['compute_s']:.4f} | "
+                f"{a['memory_s']:.4f} | {a['collective_s']:.4f} | "
+                f"**{a['bottleneck']}** | {a['useful_ratio']} | "
+                f"{a['step_time_bound_s']:.4f} |")
+    return "\n".join(lines)
+
+
+def main():
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text("## Dry-run table\n\n" + dryrun_table()
+                   + "\n\n## Roofline table (single-pod, 256 chips)\n\n"
+                   + roofline_table() + "\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

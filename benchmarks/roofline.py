@@ -1,0 +1,112 @@
+"""Roofline analysis (deliverable g): derive the three terms per
+(arch x shape x mesh) from the dry-run artifacts.
+
+  compute    = HLO_FLOPs / peak_FLOPs            (per device)
+  memory     = HLO_bytes / HBM_bw                (per device)
+  collective = wire_bytes / (links x link_bw)    (per device)
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+MODEL_FLOPS = 6·N·D (dense; N_active for MoE) for the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+N_LINKS = 4                # 2D torus: 4 links per chip
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def active_params(cfg) -> int:
+    """Activated parameters per token (MoE: shared + top-k of routed)."""
+    n = cfg.param_count()
+    if cfg.moe is None:
+        return n
+    m = cfg.moe
+    n_mats = 3 if cfg.gated_mlp else 2
+    per_expert = n_mats * cfg.d_model * cfg.d_ff
+    routed_total = cfg.num_layers * m.num_experts * per_expert
+    routed_active = cfg.num_layers * m.top_k * per_expert
+    return n - routed_total + routed_active
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N_active·tokens for train; 2·N_active·tokens for inference."""
+    na = active_params(cfg)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * na * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * na * tokens
+    return 2.0 * na * shape.global_batch      # decode: one token per seq
+
+
+def analyze(rec: dict) -> dict:
+    from benchmarks.analytic import bytes_per_device, flops_per_device
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    agg = rec.get("agg") or "mean"
+    n_dev = rec["n_devices"]
+    # compute/memory: analytic napkin models (XLA aggregate cost_analysis
+    # counts scan bodies once — see analytic.py); collectives: exact HLO
+    # parse with while trip-count scaling.
+    flops_dev = flops_per_device(cfg, shape, n_dev, agg)
+    bytes_dev = bytes_per_device(cfg, shape, n_dev, agg)
+    wire = rec["collectives"].get("total_wire_bytes",
+                                  rec["collectives"]["total_bytes"])
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = wire / (N_LINKS * LINK_BW)
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    mf_dev = model_flops(cfg, shape, shape.kind) / n_dev
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "bottleneck": dom.replace("_s", ""),
+        "model_flops_per_dev": mf_dev,
+        "useful_ratio": round(mf_dev / flops_dev, 3) if flops_dev else None,
+        "hlo_flops_dev": rec["cost"].get("flops", 0.0),
+        "step_time_bound_s": round(max(terms.values()), 6),
+    }
+
+
+def main():
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in INPUT_SHAPES:
+            for mesh_tag in ("single",):
+                for agg in ("obcsaa", "mean"):
+                    p = DRYRUN_DIR / f"{arch}__{shape}__{mesh_tag}__{agg}.json"
+                    if not p.exists():
+                        continue
+                    rec = json.loads(p.read_text())
+                    if rec.get("status") != "ok":
+                        rows.append((f"roofline/{arch}/{shape}/{agg}", 0.0,
+                                     rec.get("status")))
+                        continue
+                    a = analyze(rec)
+                    rows.append((
+                        f"roofline/{arch}/{shape}/{agg}",
+                        a["step_time_bound_s"] * 1e6,
+                        f"bottleneck={a['bottleneck']};"
+                        f"compute={a['compute_s']:.4f}s;"
+                        f"memory={a['memory_s']:.4f}s;"
+                        f"collective={a['collective_s']:.4f}s;"
+                        f"useful={a['useful_ratio']}"))
+                    break   # one agg per pair in the table
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

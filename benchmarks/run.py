@@ -1,0 +1,57 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run              # quick set
+  PYTHONPATH=src python -m benchmarks.run --full       # paper-scale rounds
+  PYTHONPATH=src python -m benchmarks.run --only fig1,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale round counts (slow on CPU)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig1..fig5,kernels,roofline")
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else None
+    rounds = 300 if args.full else 60
+
+    from benchmarks import (ablations, fig1_sparsification, fig2_dimension,
+                            fig3_scheduling, fig4_samples, fig5_noise,
+                            kernels_bench, roofline)
+
+    from benchmarks.common import cached_suite
+
+    suites = {
+        "fig1": lambda: fig1_sparsification.main(rounds=rounds),
+        "fig2": lambda: fig2_dimension.main(rounds=rounds),
+        "fig3": lambda: fig3_scheduling.main(rounds=max(40, rounds // 2)),
+        "fig4": lambda: fig4_samples.main(rounds=max(40, rounds // 2)),
+        "fig5": lambda: fig5_noise.main(rounds=max(40, rounds // 2)),
+        "kernels": kernels_bench.main,
+        "ablations": lambda: ablations.main(rounds=max(40, rounds // 2)),
+        "roofline": roofline.main,   # cheap, always fresh (reads dryrun/)
+    }
+    print("name,us_per_call,derived", flush=True)
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            if name == "roofline":
+                fn()
+            else:
+                cached_suite(f"{name}:r{rounds}", fn)
+        except Exception as e:  # keep the harness running
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}",
+                  file=sys.stdout, flush=True)
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: 1-bit CS federated learning over the air — production JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,68 @@
+"""msgpack-based pytree checkpointing (no orbax in this container).
+
+Layout: <dir>/step_<N>/{tree.msgpack, arrays.npz}. Arrays are stored in an
+npz (zero-copy reload); the msgpack holds the treedef + leaf metadata.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    arr = np.asarray(leaf)
+    if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+        # npz cannot roundtrip ml_dtypes (bfloat16 etc.); store as f32,
+        # the leaf dtype is recorded in meta and restored on load
+        arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
+    return arr
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [(jax.tree_util.keystr(path), _to_numpy(leaf))
+              for path, leaf in flat[0]]
+    return leaves, flat[1]
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"a{i}": arr for i, (_, arr) in enumerate(leaves)}
+    meta = {"keys": [k for k, _ in leaves],
+            "dtypes": [str(a.dtype) for _, a in leaves],
+            "step": step}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "tree.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+    return path
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "tree.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    arrays = [data[f"a{i}"] for i in range(len(meta["keys"]))]
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    if len(flat) != len(arrays):
+        raise ValueError(f"checkpoint has {len(arrays)} leaves, template has "
+                         f"{len(flat)}")
+    restored = [jax.numpy.asarray(a).astype(l.dtype).reshape(l.shape)
+                for a, l in zip(arrays, flat)]
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None

@@ -1,0 +1,47 @@
+"""Wireless MAC model (paper §II-B.4).
+
+Block Rayleigh fading: h_{i,t} drawn per (worker, round) from N(0,1) as in
+the paper's §V simulation setup; AWGN z_t ~ N(0, σ²I) added at the PS. The
+superposition property of the MAC is the arithmetic sum — in the distributed
+runtime this sum IS the psum over the worker mesh axes.
+
+CSI is known at both ends (paper footnote 3); channels are near-zero
+clamped so the channel-inversion power control (eq. 10) stays bounded, which
+models the paper's implicit "scheduled workers have usable channels".
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+H_MIN = 1e-3  # clamp |h| to keep 1/h bounded (worker would be unscheduled)
+
+
+def draw_channels(key, n_workers: int, clamp: bool = True) -> jnp.ndarray:
+    """|h_{i,t}| for one round. Paper §V: h ~ N(0,1) (Rayleigh magnitude)."""
+    h = jax.random.normal(key, (n_workers,))
+    h = jnp.abs(h)
+    if clamp:
+        h = jnp.maximum(h, H_MIN)
+    return h
+
+
+def draw_noise(key, shape, noise_var: float) -> jnp.ndarray:
+    return jax.random.normal(key, shape) * jnp.sqrt(
+        jnp.asarray(noise_var, jnp.float32))
+
+
+def mac_aggregate(symbols: jnp.ndarray, h: jnp.ndarray, p: jnp.ndarray,
+                  noise: jnp.ndarray) -> jnp.ndarray:
+    """Centralized (simulation) form of eq. (8):
+    y = Σ_i h_i p_i c_i + z,  symbols: (U, S)."""
+    return jnp.einsum("u,us->s", h * p, symbols) + noise
+
+
+def post_process(y: jnp.ndarray, k_weights: jnp.ndarray, beta: jnp.ndarray,
+                 b_t: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (13): divide by Σ_i K_i β_i b_t."""
+    denom = jnp.sum(k_weights * beta) * b_t
+    return y / jnp.maximum(denom, 1e-12)

@@ -1,0 +1,54 @@
+"""Measurement matrix Φ (paper §II-B.2).
+
+The paper draws Φ ∈ R^{S×D} i.i.d. N(0, 1/S), shared between workers and PS
+ahead of transmission. Here Φ is generated from a seeded PRNG so "sharing"
+is a 32-bit seed, and the production variant is block-diagonal: one
+Φ_c ∈ R^{S_c×D_c} applied to every chunk (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_phi(seed: int, s_dim: int, d_dim: int, dtype=jnp.float32):
+    """Φ with entries N(0, 1/S) — paper's normalization (§V)."""
+    key = jax.random.PRNGKey(seed)
+    return (jax.random.normal(key, (s_dim, d_dim))
+            / jnp.sqrt(jnp.asarray(s_dim, jnp.float32))).astype(dtype)
+
+
+def rip_constant_estimate(phi: jnp.ndarray, sparsity: int, n_trials: int = 64,
+                          seed: int = 1):
+    """Monte-Carlo estimate of the RIP constant δ for κ-sparse vectors:
+    max deviation of ||Φx||²/||x||² from 1 over random κ-sparse x (eq. 41)."""
+    s_dim, d_dim = phi.shape
+    key = jax.random.PRNGKey(seed)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        idx = jax.random.choice(k1, d_dim, (sparsity,), replace=False)
+        vals = jax.random.normal(k2, (sparsity,))
+        x = jnp.zeros((d_dim,)).at[idx].set(vals)
+        r = jnp.sum((phi @ x) ** 2) / jnp.sum(x ** 2)
+        return jnp.abs(r - 1.0)
+
+    devs = jax.vmap(one)(jax.random.split(key, n_trials))
+    return jnp.max(devs)
+
+
+def reconstruction_constant(delta: float) -> float:
+    """Paper eq. (46): C = 2ϖ/(1−ϱ), ϖ = 2√(1+δ)/√(1−δ), ϱ = √2·δ/(1−δ).
+
+    Valid for δ ≤ √2 − 1 (Candès RIP condition)."""
+    import math
+    varpi = 2.0 * math.sqrt(1.0 + delta) / math.sqrt(1.0 - delta)
+    varrho = math.sqrt(2.0) * delta / (1.0 - delta)
+    if varrho >= 1.0:
+        raise ValueError(f"delta={delta} violates RIP reconstruction bound")
+    return 2.0 * varpi / (1.0 - varrho)
+
+
+def project_chunked(phi: jnp.ndarray, g_chunks: jnp.ndarray):
+    """Block-diagonal projection: g_chunks (n, D_c) -> (n, S_c)."""
+    return jnp.einsum("sd,nd->ns", phi, g_chunks)

@@ -1,0 +1,176 @@
+"""OBCSAA — One-Bit Compressive-Sensing Analog Aggregation (paper §II).
+
+End-to-end aggregator:  per worker  C(g) = sign(Φ · sparse_κ(g))  (eq. 7),
+power-controlled superposition over the MAC (eq. 8-12), post-processing
+(eq. 13), 1-bit CS reconstruction (eq. 43), model update (eq. 14).
+
+Two execution modes share the same compression core:
+
+- ``simulate_round``: the paper's §V simulation — U workers' gradients are
+  stacked on one device, the MAC sum is an einsum, channels/noise drawn from
+  a PRNG. Used by the FL runtime + paper-figure benchmarks.
+- ``shardmap_compress``/``shardmap_reconstruct``: the production path — each
+  data-parallel shard IS a worker; the MAC superposition IS the psum over the
+  worker mesh axes (DESIGN.md §3). Reconstruction is sharded over chunks.
+
+The measurement operator is block-diagonal (chunked) per DESIGN.md §4; for
+the paper's D=50,890 MLP one chunk of D_c=D reproduces the paper exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as chan
+from repro.core.measurement import make_phi
+from repro.core.quantize import sign_pm1
+from repro.core.reconstruction import reconstruct
+from repro.core.sparsify import (pad_to_chunks, topk_sparsify,
+                                 topk_sparsify_bisect)
+from repro.dist.sharding import constrain
+
+
+@dataclass(frozen=True)
+class OBCSAAConfig:
+    chunk: int = 4096            # D_c
+    measure: int = 1024          # S_c
+    topk: int = 409              # κ_c
+    # Decode-side sparsity: the superposed gradient has κ̄ > κ (paper §II-B.2,
+    # distinct per-worker supports). 0 -> heuristic min(4κ, S/2).
+    recon_topk: int = 0
+    biht_iters: int = 30
+    recon_alg: str = "biht"      # BIHT (paper §V); "iht" also available
+    recon_tau: float = 1.0
+    noise_var: float = 1e-4      # σ² (mW)
+    p_max: float = 10.0          # P^Max (mW)
+    phi_seed: int = 42
+    magnitude_tracking: bool = True
+    # SPMD-friendly top-k (bisection threshold; §Perf iteration 6):
+    # jax.lax.top_k's sort cannot be partitioned by GSPMD and all-gathers the
+    # full chunk array at production scale. The distributed train step turns
+    # this on; the single-host simulation keeps exact sort-based top-k.
+    spmd_topk: bool = False
+    use_kernels: bool = False    # Pallas kernels (interpret on CPU)
+
+    def phi(self, dtype=jnp.float32):
+        return make_phi(self.phi_seed, self.measure, self.chunk, dtype)
+
+    @property
+    def decode_k(self) -> int:
+        return self.recon_topk or min(4 * self.topk, self.measure // 2)
+
+
+# --- compression core (per worker) ---------------------------------------------
+
+def compress_chunks(cfg: OBCSAAConfig, flat: jnp.ndarray, phi=None):
+    """flat: (D_pad,) with D_pad % chunk == 0, or pre-chunked (n, chunk).
+
+    Returns (signs (n_chunks, S_c), mags (n_chunks,))."""
+    phi = cfg.phi(flat.dtype) if phi is None else phi
+    gc = flat if flat.ndim == 2 else flat.reshape(-1, cfg.chunk)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        sparse, _ = kops.topk_select(gc, cfg.topk)
+        signs = kops.cs_project_sign(phi, sparse)
+    else:
+        tk = topk_sparsify_bisect if cfg.spmd_topk else topk_sparsify
+        sparse, _ = tk(gc, cfg.topk)
+        signs = sign_pm1(jnp.einsum("sd,nd->ns", phi, sparse))
+    mags = jnp.linalg.norm(sparse, axis=-1)
+    return signs, mags
+
+
+def reconstruct_chunks(cfg: OBCSAAConfig, y: jnp.ndarray,
+                       mags: Optional[jnp.ndarray] = None, phi=None):
+    """y: (n_chunks, S_c) post-processed aggregate. Returns flat (D_pad,)."""
+    phi = cfg.phi(y.dtype) if phi is None else phi
+    y = constrain(y, ("model", None))
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        xhat = kops.biht(y, phi, cfg.decode_k, cfg.biht_iters, cfg.recon_tau)
+    else:
+        ht_fn = None
+        if cfg.spmd_topk:
+            def ht_fn(x, k):
+                return topk_sparsify_bisect(x, k)[0]
+        xhat = reconstruct(y, phi, cfg.decode_k, algorithm=cfg.recon_alg,
+                           iters=cfg.biht_iters, tau=cfg.recon_tau,
+                           ht_fn=ht_fn)
+    if cfg.magnitude_tracking and mags is not None:
+        norm = jnp.linalg.norm(xhat, axis=-1, keepdims=True)
+        xhat = xhat * (mags[:, None] / jnp.maximum(norm, 1e-12))
+    return xhat.reshape(-1)
+
+
+# --- simulation mode (paper §V) --------------------------------------------------
+
+def simulate_round(cfg: OBCSAAConfig, grads_flat: jnp.ndarray,
+                   k_weights: jnp.ndarray, beta: jnp.ndarray, b_t,
+                   h: jnp.ndarray, key) -> Tuple[jnp.ndarray, dict]:
+    """grads_flat: (U, D). Returns (g_hat (D,), diagnostics).
+
+    Implements eq. (6)-(14) with perfect channel inversion: the received
+    aggregate is Σ_i K_i b_t β_i C(g_i) + z (eq. 12)."""
+    U, D = grads_flat.shape
+    pad = (-D) % cfg.chunk
+    gpad = jnp.pad(grads_flat, ((0, 0), (0, pad)))
+    phi = cfg.phi()
+    signs, mags = jax.vmap(lambda g: compress_chunks(cfg, g, phi))(gpad)
+    w = k_weights * beta * b_t                      # (U,)
+    y = jnp.einsum("u,ucs->cs", w.astype(signs.dtype), signs)
+    noise = chan.draw_noise(key, y.shape, cfg.noise_var)
+    y = y + noise                                   # eq. (12)
+    denom = jnp.maximum(jnp.sum(k_weights * beta) * b_t, 1e-12)
+    y = y / denom                                   # eq. (13)
+    mbar = jnp.einsum("u,uc->c", (k_weights * beta).astype(mags.dtype),
+                      mags) / jnp.maximum(jnp.sum(k_weights * beta), 1e-12)
+    ghat = reconstruct_chunks(cfg, y, mbar if cfg.magnitude_tracking else None,
+                              phi)[:D]
+    diag = {"denom": denom, "mbar_mean": jnp.mean(mbar),
+            "y_rms": jnp.sqrt(jnp.mean(y ** 2))}
+    return ghat, diag
+
+
+# --- distributed mode (inside shard_map over worker axes) -------------------------
+
+def shardmap_aggregate(cfg: OBCSAAConfig, local_flat: jnp.ndarray,
+                       worker_axes, *, k_weight, beta_i, b_t, n_workers: int,
+                       noise_key, phi=None) -> jnp.ndarray:
+    """Called INSIDE shard_map(manual over worker_axes). local_flat: (D_pad,)
+    is this worker's local gradient; returns the reconstructed global
+    gradient (identical on all workers, like the PS broadcast).
+
+    The psum over ``worker_axes`` is the over-the-air superposition; AWGN is
+    added once at the PS (same key on every shard -> identical noise)."""
+    signs, mags = compress_chunks(cfg, local_flat, phi)
+    w = (k_weight * beta_i * b_t).astype(signs.dtype)
+    contrib = signs * w
+    y = jax.lax.psum(contrib, worker_axes)          # over-the-air sum, eq. (12)
+    ksum = jax.lax.psum(k_weight * beta_i, worker_axes)
+    denom = jnp.maximum(ksum * b_t, 1e-12)
+    noise = chan.draw_noise(noise_key, y.shape, cfg.noise_var)
+    y = (y + noise) / denom                         # eq. (13)
+    if cfg.magnitude_tracking:
+        mbar = jax.lax.psum(mags * (k_weight * beta_i).astype(mags.dtype),
+                            worker_axes) / jnp.maximum(ksum, 1e-12)
+    else:
+        mbar = None
+    return reconstruct_chunks(cfg, y, mbar, phi)
+
+
+def comm_stats(cfg: OBCSAAConfig, D: int) -> dict:
+    """Wire statistics per worker per round (vs uncompressed analog float)."""
+    n_chunks = -(-D // cfg.chunk)
+    symbols = n_chunks * cfg.measure + (n_chunks if cfg.magnitude_tracking
+                                        else 0)
+    return {
+        "D": D,
+        "n_chunks": n_chunks,
+        "symbols_per_round": symbols,
+        "compression_ratio": D / symbols,
+        "latency_fraction": symbols / D,   # same-bandwidth transmission time
+    }

@@ -1,0 +1,39 @@
+"""Power control (paper eq. 10-11).
+
+p_{i,t} = β_{i,t} K_i b_t / h_{i,t}. Because every transmitted symbol is ±1,
+|p_i c_i|² = β_i² K_i² b_t² / h_i² — independent of the gradient. The peak
+constraint (11) therefore bounds b_t per worker:
+
+    b_t ≤ h_i √(P_i^Max) / K_i   for every scheduled worker i.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def power_factors(beta: jnp.ndarray, k_weights: jnp.ndarray, b_t,
+                  h: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (10)."""
+    return beta * k_weights * b_t / h
+
+
+def tx_power(beta: jnp.ndarray, k_weights: jnp.ndarray, b_t,
+             h: jnp.ndarray) -> jnp.ndarray:
+    """Per-worker transmit power |p_i c_i|² (eq. 11, symbol-independent)."""
+    return (beta * k_weights * b_t) ** 2 / h ** 2
+
+
+def max_bt(beta: jnp.ndarray, k_weights: jnp.ndarray, h: jnp.ndarray,
+           p_max) -> jnp.ndarray:
+    """Largest b_t satisfying (11) for all scheduled workers."""
+    per_worker = h * jnp.sqrt(jnp.asarray(p_max, jnp.float32)) / k_weights
+    # unscheduled workers impose no constraint
+    caps = jnp.where(beta > 0, per_worker, jnp.inf)
+    return jnp.min(caps)
+
+
+def feasible(beta: jnp.ndarray, k_weights: jnp.ndarray, b_t,
+             h: jnp.ndarray, p_max) -> jnp.ndarray:
+    # relative slack: b_t on the exact boundary must test feasible in f32
+    return jnp.all(tx_power(beta, k_weights, b_t, h)
+                   <= p_max * (1.0 + 1e-5) + 1e-9)

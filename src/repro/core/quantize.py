@@ -1,0 +1,32 @@
+"""1-bit quantization (paper eq. 7): C(g) = sign(Φ sparse_κ(g)).
+
+sign(0) is mapped to +1 so every transmitted symbol is ±1 — required for the
+gradient-independent power constraint (eq. 11).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sign_pm1(x: jnp.ndarray) -> jnp.ndarray:
+    """Strict ±1 sign (never 0)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def quantization_error_bound(S: int, D: int, kappa: int, G: float,
+                             delta: float) -> float:
+    """Paper eq. (42): E||e^q||² ≤ S + (1+δ)(D−κ)/D G²."""
+    return S + (1.0 + delta) * (D - kappa) / D * G ** 2
+
+
+def pack_bits(signs: jnp.ndarray) -> jnp.ndarray:
+    """Pack ±1 float symbols to uint8 bitmaps (8x wire-size reduction for the
+    digital-fallback path; the analog path transmits symbols directly)."""
+    bits = (signs > 0).astype(jnp.uint8).reshape(-1, 8)
+    weights = (2 ** jnp.arange(8, dtype=jnp.uint8)).astype(jnp.uint8)
+    return jnp.sum(bits * weights[None], axis=1, dtype=jnp.uint8)
+
+
+def unpack_bits(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    bits = (packed[:, None] >> jnp.arange(8, dtype=jnp.uint8)[None]) & 1
+    return (bits.astype(jnp.float32) * 2.0 - 1.0).reshape(-1)[:n]

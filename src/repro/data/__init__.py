@@ -1,0 +1,5 @@
+from repro.data.mnist import load_mnist, partition_workers
+from repro.data.synthetic import synthetic_mnist, token_stream
+
+__all__ = ["load_mnist", "partition_workers", "synthetic_mnist",
+           "token_stream"]

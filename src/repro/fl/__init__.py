@@ -1,0 +1,7 @@
+from repro.fl.rounds import FederatedTrainer, FLConfig, RoundLog
+from repro.fl.server import receive_and_reconstruct, schedule_round
+from repro.fl.worker import local_gradient, stacked_local_gradients, transmit
+
+__all__ = ["FederatedTrainer", "FLConfig", "RoundLog",
+           "receive_and_reconstruct", "schedule_round", "local_gradient",
+           "stacked_local_gradients", "transmit"]

@@ -1,0 +1,171 @@
+"""FL round orchestration: the paper's §V experiment engine.
+
+Each round t:
+  1. PS draws this round's block-fading channels h_{i,t} (known CSI).
+  2. PS solves P2 (scheduling method: all | enum | admm | greedy) -> β_t, b_t.
+  3. Scheduled workers compute local full-batch gradients (eq. 3), compress
+     (eq. 6-7), power-scale (eq. 10) and transmit simultaneously.
+  4. The MAC superimposes; PS adds AWGN, post-processes (eq. 13), decodes
+     (eq. 43) and broadcasts ĝ_t; everyone updates w (eq. 14).
+
+Aggregators:
+  perfect  — error-free weighted mean (paper's "perfect aggregation" bench)
+  topk_aa  — top-κ sparsified analog aggregation, no CS/quantization
+             (the [21,22]-style baseline the paper compares against)
+  obcsaa   — the paper's full 1-bit CS pipeline
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as chan
+from repro.core.error_floor import AnalysisConstants
+from repro.core.obcsaa import OBCSAAConfig, simulate_round
+from repro.core.sparsify import flatten_pytree, topk_sparsify
+from repro.fl.server import schedule_round
+from repro.fl.worker import stacked_local_gradients
+from repro.optim.optimizers import Optimizer, sgd
+
+
+@dataclass
+class FLConfig:
+    aggregator: str = "obcsaa"       # perfect | topk_aa | obcsaa
+    scheduler: str = "all"           # all | enum | admm | greedy
+    learning_rate: float = 0.1       # paper §V
+    rounds: int = 300
+    eval_every: int = 10
+    seed: int = 0
+    obcsaa: OBCSAAConfig = field(default_factory=OBCSAAConfig)
+    const: AnalysisConstants = field(default_factory=AnalysisConstants)
+    # topk_aa baseline: same κ budget as obcsaa over the FULL vector
+    topk_dense: int = 1000
+    # Beyond-paper: per-worker error feedback (Stich et al., paper ref [37]):
+    # each worker keeps the residual of its top-κ sparsification and adds it
+    # to the next round's gradient before compression.
+    error_feedback: bool = False
+
+
+@dataclass
+class RoundLog:
+    round: int
+    loss: float
+    accuracy: float
+    n_scheduled: int
+    b_t: float
+
+
+def _perfect_aggregate(grads_flat, k_weights, beta):
+    w = (k_weights * beta)[:, None]
+    return jnp.sum(grads_flat * w, axis=0) / jnp.maximum(
+        jnp.sum(k_weights * beta), 1e-12)
+
+
+def _topk_aa_aggregate(grads_flat, k_weights, beta, b_t, kappa, noise_var,
+                       key):
+    """Sparsified analog aggregation (no CS, no 1-bit): workers transmit
+    their top-κ gradients directly; AWGN at the PS."""
+    sp, _ = topk_sparsify(grads_flat, kappa)
+    w = (k_weights * beta * b_t)[:, None]
+    y = jnp.sum(sp * w, axis=0)
+    y = y + chan.draw_noise(key, y.shape, noise_var)
+    return y / jnp.maximum(jnp.sum(k_weights * beta) * b_t, 1e-12)
+
+
+class FederatedTrainer:
+    """Drives FL rounds for any (loss_fn, params) pair + stacked worker data."""
+
+    def __init__(self, cfg: FLConfig, loss_fn: Callable, params,
+                 worker_data, k_weights: np.ndarray,
+                 eval_fn: Optional[Callable] = None,
+                 optimizer: Optional[Optimizer] = None):
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.params = params
+        self.worker_data = worker_data
+        self.k_weights = np.asarray(k_weights, np.float64)
+        self.eval_fn = eval_fn
+        self.opt = optimizer or sgd()
+        self.opt_state = self.opt.init(params)
+        flat, self._unflatten = flatten_pytree(params)
+        self.D = int(flat.shape[0])
+        self._rng = np.random.default_rng(cfg.seed)
+        self.logs: List[RoundLog] = []
+        self._grad_fn = jax.jit(functools.partial(stacked_local_gradients,
+                                                  loss_fn))
+        self._agg_fn = jax.jit(self._aggregate)
+        U = len(self.k_weights)
+        self._residual = jnp.zeros((U, self.D)) if cfg.error_feedback \
+            else None
+        if cfg.error_feedback:
+            from repro.core.sparsify import topk_sparsify_chunked
+            ob = cfg.obcsaa
+            n_chunks = -(-self.D // ob.chunk)
+            pad = n_chunks * ob.chunk - self.D
+
+            @jax.jit
+            def ef_split(grads, residual):
+                corrected = grads + residual
+                gp = jnp.pad(corrected, ((0, 0), (0, pad)))
+                sp, _ = jax.vmap(lambda g: topk_sparsify_chunked(
+                    g, ob.topk, ob.chunk))(gp)
+                sp = sp[:, :self.D]
+                return corrected, corrected - sp
+
+            self._ef_split = ef_split
+
+    def _aggregate(self, grads_flat, k_weights, beta, b_t, h, key):
+        cfg = self.cfg
+        if cfg.aggregator == "perfect":
+            return _perfect_aggregate(grads_flat, k_weights, beta)
+        if cfg.aggregator == "topk_aa":
+            return _topk_aa_aggregate(grads_flat, k_weights, beta, b_t,
+                                      cfg.topk_dense, cfg.obcsaa.noise_var,
+                                      key)
+        ghat, _ = simulate_round(cfg.obcsaa, grads_flat, k_weights, beta,
+                                 b_t, h, key)
+        return ghat
+
+    def run_round(self, t: int) -> Dict:
+        cfg = self.cfg
+        U = len(self.k_weights)
+        h = np.abs(self._rng.normal(size=U))
+        h = np.maximum(h, chan.H_MIN)
+        if cfg.aggregator == "perfect":
+            beta, b_t = np.ones(U), 1.0
+        else:
+            beta, b_t = schedule_round(cfg.scheduler, h, self.k_weights,
+                                       cfg.obcsaa, cfg.const, self.D)
+        grads = self._grad_fn(self.params, self.worker_data)     # (U, D)
+        if self._residual is not None:
+            grads, self._residual = self._ef_split(grads, self._residual)
+        key = jax.random.PRNGKey(cfg.seed * 100003 + t)
+        ghat = self._agg_fn(grads, jnp.asarray(self.k_weights, jnp.float32),
+                            jnp.asarray(beta, jnp.float32),
+                            jnp.asarray(b_t, jnp.float32),
+                            jnp.asarray(h, jnp.float32), key)
+        g_tree = self._unflatten(ghat[:self.D])
+        self.params, self.opt_state = self.opt.update(
+            g_tree, self.opt_state, self.params, cfg.learning_rate)
+        return {"beta": beta, "b_t": b_t, "h": h}
+
+    def run(self, rounds: Optional[int] = None, verbose: bool = False):
+        rounds = rounds or self.cfg.rounds
+        for t in range(rounds):
+            info = self.run_round(t)
+            if self.eval_fn and (t % self.cfg.eval_every == 0
+                                 or t == rounds - 1):
+                loss, acc = self.eval_fn(self.params)
+                self.logs.append(RoundLog(t, float(loss), float(acc),
+                                          int(info["beta"].sum()),
+                                          float(info["b_t"])))
+                if verbose:
+                    print(f"round {t:4d} loss={float(loss):.4f} "
+                          f"acc={float(acc):.4f} "
+                          f"sched={int(info['beta'].sum())}/{len(info['h'])}")
+        return self.logs

@@ -1,0 +1,46 @@
+"""FL parameter server: scheduling (P2), post-processing, reconstruction,
+broadcast (paper eq. 13-14, §IV)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.error_floor import AnalysisConstants
+from repro.core.obcsaa import OBCSAAConfig, reconstruct_chunks
+from repro.core.scheduling import (Problem, admm_solve, enumerate_solve,
+                                   greedy_solve, optimal_bt)
+
+
+def schedule_round(method: str, h: np.ndarray, k_weights: np.ndarray,
+                   cfg: OBCSAAConfig, const: AnalysisConstants, D: int
+                   ) -> Tuple[np.ndarray, float]:
+    """Solve P2 for this round's channels. Returns (β, b_t)."""
+    prob = Problem(h=h, k_weights=k_weights, p_max=cfg.p_max,
+                   noise_var=cfg.noise_var, D=D, S=cfg.measure,
+                   kappa=cfg.topk, const=const)
+    if method == "all":
+        beta = np.ones(len(h))
+        return beta, optimal_bt(prob, beta)
+    if method == "enum":
+        beta, bt, _ = enumerate_solve(prob)
+    elif method == "admm":
+        beta, bt, _ = admm_solve(prob)
+    elif method == "greedy":
+        beta, bt, _ = greedy_solve(prob)
+    else:
+        raise ValueError(f"unknown scheduling method {method!r}")
+    return beta, bt
+
+
+def receive_and_reconstruct(cfg: OBCSAAConfig, y_sum: jnp.ndarray,
+                            mags_sum: jnp.ndarray, *, ksum_beta, b_t, noise,
+                            D: int, phi=None) -> jnp.ndarray:
+    """PS receive side: add AWGN, post-process (eq. 13), decode (eq. 43)."""
+    denom = jnp.maximum(ksum_beta * b_t, 1e-12)
+    y = (y_sum + noise) / denom
+    mbar = mags_sum / jnp.maximum(ksum_beta, 1e-12)
+    ghat = reconstruct_chunks(cfg, y, mbar if cfg.magnitude_tracking else None,
+                              phi)
+    return ghat[:D]

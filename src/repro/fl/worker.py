@@ -1,0 +1,40 @@
+"""FL worker: local gradient computation + OBCSAA transmit side (eq. 3, 6-7, 10)."""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.obcsaa import OBCSAAConfig, compress_chunks
+from repro.core.sparsify import flatten_pytree
+
+
+def local_gradient(loss_fn: Callable, params, data) -> Tuple:
+    """Full-batch GD gradient on this worker's local dataset (eq. 3)."""
+    return jax.grad(lambda p: loss_fn(p, data))(params)
+
+
+def stacked_local_gradients(loss_fn: Callable, params, stacked_data):
+    """vmap over U workers' datasets. stacked_data leaves: (U, ...).
+
+    Returns stacked flat gradients (U, D)."""
+    def one(data):
+        g = local_gradient(loss_fn, params, data)
+        flat, _ = flatten_pytree(g)
+        return flat
+
+    return jax.vmap(one)(stacked_data)
+
+
+def transmit(cfg: OBCSAAConfig, flat_grad: jnp.ndarray, *, k_weight, beta_i,
+             b_t, phi=None):
+    """Worker-side pipeline: sparse_κ -> Φ -> sign -> power scale (eq. 10).
+
+    Channel inversion makes the effective transmitted weight K_i β_i b_t
+    (the h_i cancels at the receiver, eq. 12)."""
+    pad = (-flat_grad.shape[0]) % cfg.chunk
+    gpad = jnp.pad(flat_grad, (0, pad))
+    signs, mags = compress_chunks(cfg, gpad, phi)
+    w = (k_weight * beta_i * b_t).astype(signs.dtype)
+    return signs * w, mags

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the OBCSAA compression pipeline.
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
+wrappers (interpret=True on CPU)."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,61 @@
+"""BIHT back-projection update kernel: x' = x + τ · r @ Φ.
+
+r: (n, S) residual, Φ: (S, D); the add into x is fused into the matmul
+epilogue (x tile read once, written once).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BN = 128
+BD = 256
+BS = 256   # contraction tile over S
+
+
+def _backproject_kernel(r_ref, phi_ref, x_ref, out_ref, acc_ref, *, n_bs,
+                        tau):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        r_ref[...], phi_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_bs - 1)
+    def _():
+        out_ref[...] = (x_ref[...].astype(jnp.float32)
+                        + tau * acc_ref[...]).astype(out_ref.dtype)
+
+
+def backproject(x: jnp.ndarray, resid: jnp.ndarray, phi: jnp.ndarray,
+                tau: float, *, interpret: bool = False) -> jnp.ndarray:
+    """x: (n, D); resid: (n, S); phi: (S, D) -> x + tau * resid @ phi."""
+    n, d = x.shape
+    s = phi.shape[0]
+    assert resid.shape == (n, s) and phi.shape == (s, d)
+    bn, bd, bs = min(BN, n), min(BD, d), min(BS, s)
+    assert n % bn == 0 and d % bd == 0 and s % bs == 0, \
+        f"shapes ({n},{s},{d}) not tileable by ({bn},{bs},{bd})"
+    n_bs = s // bs
+    grid = (n // bn, d // bd, n_bs)
+    return pl.pallas_call(
+        functools.partial(_backproject_kernel, n_bs=n_bs, tau=tau),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bs), lambda i, j, k: (i, k)),   # resid
+            pl.BlockSpec((bs, bd), lambda i, j, k: (k, j)),   # phi
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),   # x
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
+        interpret=interpret,
+    )(resid, phi, x)

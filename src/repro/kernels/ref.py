@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sign_pm1(x):
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def cs_project_sign_ref(phi: jnp.ndarray, chunks: jnp.ndarray) -> jnp.ndarray:
+    """phi: (S, D); chunks: (n, D) -> ±1 signs (n, S)."""
+    return sign_pm1(jnp.einsum("sd,nd->ns", phi, chunks))
+
+
+def topk_select_ref(chunks: jnp.ndarray, k: int):
+    """Exact per-row top-k by magnitude. Returns (masked values, mask)."""
+    a = jnp.abs(chunks)
+    kth = jax.lax.top_k(a, k)[0][..., -1:]
+    mask = a >= kth
+    over = jnp.cumsum(mask, axis=-1) <= k
+    mask = mask & over
+    return chunks * mask, mask
+
+
+def backproject_ref(x: jnp.ndarray, resid: jnp.ndarray, phi: jnp.ndarray,
+                    tau: float) -> jnp.ndarray:
+    """x + tau * resid @ phi. x: (n, D); resid: (n, S); phi: (S, D)."""
+    return x + tau * jnp.einsum("ns,sd->nd", resid, phi)
+
+
+def biht_ref(y: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int,
+             tau: float) -> jnp.ndarray:
+    """Full BIHT loop (sign-consistency), unit-normalized per row."""
+    S = phi.shape[0]
+
+    def step(x, _):
+        resid = y - sign_pm1(jnp.einsum("sd,nd->ns", phi, x))
+        x = backproject_ref(x, resid, phi, tau / S)
+        x, _ = topk_select_ref(x, k)
+        return x, None
+
+    x0, _ = topk_select_ref(jnp.einsum("sd,ns->nd", phi, y) / S, k)
+    x, _ = jax.lax.scan(step, x0, None, length=iters)
+    norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(norm, 1e-12)

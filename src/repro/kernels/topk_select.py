@@ -1,0 +1,64 @@
+"""Per-chunk top-κ selection kernel (the sparse_κ operator, eq. 6).
+
+A sort-free magnitude-threshold search: 32 rounds of bisection on the
+per-row threshold t such that #{|x| ≥ t} = κ, entirely in VMEM (vector unit
+work, no MXU). Exact for rows with distinct magnitudes — bisection resolves
+the gap between the κ-th and (κ+1)-th magnitude; ties may admit >κ entries
+(measure-zero for float gradients; the jnp oracle breaks ties by index).
+
+Each program owns a (BN, D) row-block; D up to 8192 keeps the block < 4 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 64
+N_BISECT = 32
+
+
+def _topk_kernel(x_ref, val_ref, mask_ref, *, k):
+    x = x_ref[...]
+    a = jnp.abs(x.astype(jnp.float32))
+    hi = jnp.max(a, axis=-1, keepdims=True)            # (bn, 1)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((a >= mid).astype(jnp.int32), axis=-1, keepdims=True)
+        # too many selected -> raise threshold; too few -> lower it
+        lo = jnp.where(cnt > k, mid, lo)
+        hi = jnp.where(cnt > k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, N_BISECT, body, (lo, hi))
+    # lo is the largest tested threshold with count > k; select with hi
+    mask = a >= jnp.minimum(hi, jnp.max(a, axis=-1, keepdims=True))
+    # guarantee at least k selected: fall back to lo when hi overshoots
+    cnt_hi = jnp.sum(mask.astype(jnp.int32), axis=-1, keepdims=True)
+    mask = jnp.where(cnt_hi >= k, mask, a >= lo)
+    val_ref[...] = (x * mask).astype(val_ref.dtype)
+    mask_ref[...] = mask.astype(mask_ref.dtype)
+
+
+def topk_select(chunks: jnp.ndarray, k: int, *, interpret: bool = False):
+    """chunks: (n, D). Returns (masked values, int8 mask)."""
+    n, d = chunks.shape
+    bn = min(BN, n)
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+    val, mask = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                   pl.BlockSpec((bn, d), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), chunks.dtype),
+                   jax.ShapeDtypeStruct((n, d), jnp.int8)],
+        interpret=interpret,
+    )(chunks)
+    return val, mask

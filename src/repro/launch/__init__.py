@@ -1,0 +1,10 @@
+"""Launch layer: production mesh, train/serve step builders, dry-run driver.
+
+NOTE: do not import ``repro.launch.dryrun`` at package level — it sets
+XLA_FLAGS (512 host devices) at import for its own process.
+"""
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               num_workers, worker_axes)
+
+__all__ = ["make_host_mesh", "make_production_mesh", "num_workers",
+           "worker_axes"]

@@ -1,0 +1,35 @@
+"""Production mesh definitions (MULTI-POD DRY-RUN spec).
+
+Functions, not module-level constants — importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: 16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+def worker_axes(mesh) -> tuple:
+    """Mesh axes that enumerate FL workers (DESIGN.md §3)."""
+    return tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+
+
+def num_workers(mesh) -> int:
+    n = 1
+    for ax in worker_axes(mesh):
+        n *= mesh.shape[ax]
+    return n

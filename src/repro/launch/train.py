@@ -1,0 +1,82 @@
+"""Runnable trainer (example-scale on CPU; production mesh on TPU).
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
+      --steps 20 --agg obcsaa
+
+Uses the same step builders as the dry-run; with --smoke the reduced config
+trains on synthetic token streams over a host mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TrainConfig, get_config, get_smoke_config
+from repro.data import token_stream
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh, make_production_mesh, num_workers
+from repro.models.registry import build_model
+
+
+def make_batch(cfg, B, S, rng_seed=0):
+    tokens, targets = token_stream(B, S, cfg.vocab_size, seed=rng_seed)
+    batch = {"tokens": jnp.asarray(tokens), "targets": jnp.asarray(targets)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = 0.01 * jnp.ones(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = 0.01 * jnp.ones(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the host mesh")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--agg", default="obcsaa", choices=["mean", "obcsaa"])
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--cs-chunk", type=int, default=1024)
+    ap.add_argument("--cs-measure", type=int, default=256)
+    ap.add_argument("--cs-topk", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh() if args.smoke else make_production_mesh()
+    tcfg = TrainConfig(aggregation=args.agg, optimizer=args.optimizer,
+                       learning_rate=args.lr, cs_chunk=args.cs_chunk,
+                       cs_measure=args.cs_measure, cs_topk=args.cs_topk,
+                       biht_iters=10)
+    model = build_model(cfg)
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        opt = steps_lib.make_optimizer(tcfg)
+        opt_state = opt.init(params)
+        step = jax.jit(steps_lib.make_train_step(model, tcfg, mesh),
+                       donate_argnums=(0, 1))
+        batch = make_batch(cfg, args.batch, args.seq)
+        for t in range(args.steps):
+            ctx = steps_lib.default_round_ctx(mesh, seed=t)
+            t0 = time.time()
+            params, opt_state, metrics = step(params, opt_state, batch, ctx)
+            loss = float(metrics["loss"])
+            print(f"step {t:4d} loss={loss:.4f} ({time.time()-t0:.2f}s)",
+                  flush=True)
+        if args.ckpt_dir:
+            from repro.checkpoint import save
+            path = save(args.ckpt_dir, args.steps, params)
+            print(f"saved checkpoint: {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The mel+conv frontend is a STUB (assignment carve-out): the model consumes
+precomputed frame embeddings (B, S_enc, d_model). Sinusoidal positions on the
+encoder, learned positions on the decoder, no RoPE (faithful to Whisper).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.models import attention as attn
+from repro.models.layers import (embed, he_init, init_embedding, init_mlp,
+                                 mlp, rmsnorm, sinusoidal_positions, unembed)
+
+MAX_DECODE_POSITIONS = 32768 * 17  # covers decode_32k; learned table
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "attn_norm": jnp.zeros((d,), dtype),
+        "attn": attn.init_gqa(ks[0], d, cfg.attention, dtype),
+        "ffn_norm": jnp.zeros((d,), dtype),
+        "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.gated_mlp, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "attn_norm": jnp.zeros((d,), dtype),
+        "attn": attn.init_gqa(ks[0], d, cfg.attention, dtype),
+        "cross_norm": jnp.zeros((d,), dtype),
+        "cross": attn.init_gqa(ks[1], d, cfg.attention, dtype),
+        "ffn_norm": jnp.zeros((d,), dtype),
+        "mlp": init_mlp(ks[2], d, cfg.d_ff, cfg.gated_mlp, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    dtype = jnp.float32
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.num_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embedding": init_embedding(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_embedding": (0.01 * jax.random.normal(
+            ks[3], (4096, cfg.d_model))).astype(dtype),  # learned dec pos (mod table)
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, d) stub embeddings -> encoder states (B,S_enc,d)."""
+    dtype = dtype_of(cfg)
+    x = frames.astype(dtype)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(dtype)[None]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        o, _ = attn.gqa_forward(lp["attn"], h, cfg.attention,
+                                positions=positions, causal=False,
+                                use_rope=False)
+        x = x + o
+        h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h, cfg.gated_mlp)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_positions(params, positions, dtype):
+    table = params["pos_embedding"]
+    return table[positions % table.shape[0]].astype(dtype)
+
+
+def decode_full(params, cfg: ModelConfig, tokens, enc_out, *, remat=True,
+                return_hidden=False):
+    """Teacher-forced decoder pass. tokens: (B,S_dec). Returns logits."""
+    dtype = dtype_of(cfg)
+    x = embed(params["embedding"], tokens, dtype) * math.sqrt(cfg.d_model)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = x + _dec_positions(params, positions, dtype)[None]
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        o, _ = attn.gqa_forward(lp["attn"], h, cfg.attention,
+                                positions=positions, causal=True,
+                                use_rope=False)
+        x = x + o
+        h = rmsnorm(x, lp["cross_norm"], cfg.norm_eps)
+        o, _ = attn.gqa_forward(lp["cross"], h, cfg.attention,
+                                positions=positions, causal=False,
+                                use_rope=False, kv=enc_out,
+                                kv_positions=enc_pos)
+        x = x + o
+        h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h, cfg.gated_mlp)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    return unembed(x, embedding=params["embedding"])
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    L = cfg.num_layers
+    a = cfg.attention
+    hd = cfg.head_dim
+    dtype = dtype_of(cfg)
+    return {
+        "k": jnp.zeros((L, batch, seq_len, a.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((L, batch, seq_len, a.num_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, cfg.encoder_seq_len, a.num_kv_heads,
+                              hd), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.encoder_seq_len, a.num_kv_heads,
+                              hd), dtype),
+    }
+
+
+def seed_cross_cache(params, cfg: ModelConfig, cache, enc_out):
+    """Fill cross-attention K/V from encoder output (once, at prefill)."""
+    def per_layer(lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       lp["cross"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       lp["cross"]["wv"].astype(enc_out.dtype))
+        return k, v
+
+    ck, cv = jax.vmap(per_layer)(params["layers"])
+    cache = dict(cache)
+    cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+    return cache
+
+
+def encdec_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One decoder token with self cache + precomputed cross K/V."""
+    dtype = dtype_of(cfg)
+    x = embed(params["embedding"], tokens, dtype) * math.sqrt(cfg.d_model)
+    x = x + _dec_positions(params, jnp.full((1,), pos, jnp.int32), dtype)[None]
+
+    def body(x, xs):
+        lp, cache_l = xs
+        h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        o, k, v = attn.gqa_decode(lp["attn"], h, cfg.attention,
+                                  cache_k=cache_l["k"], cache_v=cache_l["v"],
+                                  pos=pos, use_rope=False)
+        x = x + o
+        h = rmsnorm(x, lp["cross_norm"], cfg.norm_eps)
+        o, _, _ = attn.gqa_decode(lp["cross"], h, cfg.attention,
+                                  cache_k=cache_l["cross_k"],
+                                  cache_v=cache_l["cross_v"], pos=pos,
+                                  use_rope=False, cross=True)
+        x = x + o
+        h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h, cfg.gated_mlp)
+        return x, {"k": k, "v": v, "cross_k": cache_l["cross_k"],
+                   "cross_v": cache_l["cross_v"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x, embedding=params["embedding"]), new_cache

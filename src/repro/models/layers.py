@@ -1,0 +1,144 @@
+"""Shared building blocks: norms, inits, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+
+def he_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = math.sqrt(2.0 / max(1, fan_in))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def lecun_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = math.sqrt(1.0 / max(1, fan_in))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --- RoPE ---------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(num_pos: int, dim: int):
+    pos = jnp.arange(num_pos, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    emb = jnp.zeros((num_pos, dim), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(pos * div))
+    emb = emb.at[:, 1::2].set(jnp.cos(pos * div))
+    return emb
+
+
+# --- MLP ----------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w1": he_init(ks[0], (d_model, d_ff), dtype=dtype),
+         "w2": he_init(ks[1], (d_ff, d_model), dtype=dtype)}
+    if gated:
+        p["w3"] = he_init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp(params, x, gated: bool):
+    h = x @ params["w1"].astype(x.dtype)
+    h = constrain(h, ("data", None, "model"))
+    if gated:
+        h = jax.nn.silu(h) * (x @ params["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    out = h @ params["w2"].astype(x.dtype)
+    return constrain(out, ("data", None, "data"))
+
+
+# --- Embedding ----------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return lecun_init(key, (vocab, d_model), fan_in=d_model, dtype=dtype)
+
+
+def embed(embedding, tokens, dtype):
+    out = jnp.take(embedding, tokens, axis=0).astype(dtype)
+    return constrain(out, ("data", None, None))
+
+
+def unembed(x, embedding=None, lm_head=None, final_softcap: float = 0.0):
+    if lm_head is not None:
+        logits = x @ lm_head.astype(x.dtype)
+    else:
+        logits = x @ embedding.T.astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), final_softcap)
+    return constrain(logits, ("data", None, "model"))
+
+
+def chunked_cross_entropy(x, targets, *, embedding=None, lm_head=None,
+                          final_softcap: float = 0.0, mask=None,
+                          seq_chunk: int = 512):
+    """Cross-entropy over vocab WITHOUT materializing (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits live only inside one scan
+    step (remat'd in the backward pass). Required for 256k-vocab training
+    shapes to fit HBM (DESIGN.md §6). x: (B,S,d); targets: (B,S)."""
+    B, S, _ = x.shape
+    cs = min(seq_chunk, S)
+    while S % cs:
+        cs //= 2
+    nb = S // cs
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    xc = x.reshape(B, nb, cs, -1).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nb, cs).transpose(1, 0, 2)
+    mc = mask.reshape(B, nb, cs).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        xb, tb, mb = xs
+        logits = unembed(xb, embedding=embedding, lm_head=lm_head,
+                         final_softcap=final_softcap)
+        # nll = logsumexp(logits) - logits[target]: never materializes logp
+        lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(logits, tb[..., None],
+                                     axis=-1)[..., 0].astype(jnp.float32)
+        nll = lse - picked
+        return carry + jnp.sum(nll * mb), None
+
+    if nb <= 1:
+        total, _ = body(jnp.zeros((), jnp.float32), (xc[0], tc[0], mc[0]))
+    else:
+        total, _ = jax.lax.scan(jax.checkpoint(body),
+                                jnp.zeros((), jnp.float32), (xc, tc, mc))
+    return total / jnp.clip(jnp.sum(mask), 1.0)

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts: top-k router + capacity-based dispatch.
+
+Dispatch strategy (§Perf iteration — see EXPERIMENTS.md):
+The naive global scatter-add into an (E, C, d) buffer forces GSPMD to
+replicate the buffer and all-reduce partial scatters (~50 GB/layer at 1M
+tokens). Instead, when a shardable data axis is live, dispatch runs inside a
+``shard_map`` manual over (pod, data): every shard computes positions with a
+LOCAL cumsum and scatters into its LOCAL (E, C_loc, d) buffer — zero
+cross-shard traffic for dispatch/combine; only the expert einsum itself
+communicates (weights are expert/ff-sharded over `model`).
+
+Shared (always-on) experts are a plain dense MLP (DeepSeek-V2 style).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import he_init, init_mlp, mlp
+
+
+def init_moe(key, d_model: int, d_ff: int, m: MoEConfig, gated=True,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": he_init(ks[0], (d_model, m.num_experts), dtype=dtype),
+        "ew1": he_init(ks[1], (m.num_experts, d_model, d_ff), fan_in=d_model,
+                       dtype=dtype),
+        "ew2": he_init(ks[2], (m.num_experts, d_ff, d_model), fan_in=d_ff,
+                       dtype=dtype),
+    }
+    if gated:
+        p["ew3"] = he_init(ks[3], (m.num_experts, d_model, d_ff),
+                           fan_in=d_model, dtype=dtype)
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d_model, d_ff * m.num_shared_experts,
+                               gated, dtype=dtype)
+    return p
+
+
+def _route(logits, top_k: int):
+    """Returns (weights (T,k), idx (T,k), aux_loss scalar)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.clip(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    E = logits.shape[-1]
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def _moe_tokens(p, xf, m: MoEConfig, gated: bool, capacity: int):
+    """Core MoE over flat tokens xf (T, d). Dispatch indices are computed
+    from THESE tokens only — call per shard for locality."""
+    T, d = xf.shape
+    k = m.top_k
+    E = m.num_experts
+    logits = xf @ p["router"].astype(xf.dtype)                  # (T,E)
+    w, idx, aux = _route(logits, k)                             # (T,k)
+    if capacity <= 0:
+        capacity = int(math.ceil(T * k / E * m.capacity_factor))
+        capacity = max(8, -(-capacity // 8) * 8)
+    flat_idx = idx.reshape(-1)                                  # (T*k,)
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)       # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)       # before me
+    pos = jnp.take_along_axis(pos_in_expert, flat_idx[:, None], axis=1)[:, 0]
+    keep = pos < capacity                                       # drop overflow
+    w_flat = w.reshape(-1) * keep
+    buf = jnp.zeros((E, capacity, d), xf.dtype)
+    src = jnp.repeat(xf, k, axis=0)                             # (T*k, d)
+    safe_pos = jnp.where(keep, pos, capacity - 1)
+    buf = buf.at[flat_idx, safe_pos].add(src * keep[:, None].astype(xf.dtype))
+    # expert MLPs: batched over E; weights sharded over `model` (auto axis)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["ew1"].astype(xf.dtype))
+    if gated:
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf,
+                                        p["ew3"].astype(xf.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["ew2"].astype(xf.dtype))
+    gathered = out_buf[flat_idx, safe_pos]                      # (T*k, d)
+    combined = (gathered * w_flat[:, None].astype(xf.dtype)).reshape(T, k, d)
+    out = jnp.sum(combined, axis=1)
+    if m.num_shared_experts:
+        out = out + mlp(p["shared"], xf[None], gated)[0]
+    return out, aux.astype(jnp.float32)
+
+
+def _auto_worker_axes():
+    """(pod, data) axes that are live AND still GSPMD-auto (not already
+    manual from an enclosing shard_map)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return (), 1, None
+    types = dict(zip(mesh.axis_names, mesh.axis_types))
+    axes = tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names
+                 and "Manual" not in str(types[ax]))
+    n = 1
+    for ax in axes:
+        n *= mesh.shape[ax]
+    return axes, n, mesh
+
+
+def moe_forward(p, x, m: MoEConfig, *, gated=True,
+                capacity: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d). Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    axes, W, mesh = _auto_worker_axes()
+    if axes and W > 1 and T % W == 0 and (T // W) >= 64:
+        spec = P(axes if len(axes) > 1 else axes[0])
+
+        def local_fn(xf):
+            out, aux = _moe_tokens(p, xf, m, gated, capacity)
+            return out, jax.lax.pmean(aux, axes)
+
+        xf = x.reshape(T, d)
+        out, aux = jax.shard_map(
+            local_fn, mesh=mesh, axis_names=set(axes),
+            in_specs=(spec,), out_specs=(spec, P()),
+            check_vma=False)(xf)
+        return out.reshape(B, S, d), aux
+    out, aux = _moe_tokens(p, x.reshape(T, d), m, gated, capacity)
+    return out.reshape(B, S, d), aux

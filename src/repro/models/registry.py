@@ -1,0 +1,194 @@
+"""Model registry: a uniform interface over all architecture families.
+
+``build_model(cfg)`` returns a ``Model`` with:
+  init(rng) -> params
+  loss_fn(params, batch) -> (scalar loss, aux)
+  forward(params, batch) -> logits
+  prefill(params, batch) -> (logits, cache)
+  init_cache(batch_size, seq_len) -> cache pytree
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+  input_specs(shape) -> dict of ShapeDtypeStructs (dry-run stand-ins)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig, dtype_of
+from repro.models import encdec, transformer
+from repro.models.mlp_mnist import init_mlp_mnist, mlp_mnist_logits, mlp_mnist_loss
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    forward: Callable
+    prefill: Callable
+    init_cache: Callable
+    decode_step: Callable
+    input_specs: Callable
+
+
+def cross_entropy(logits, targets, mask=None):
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.clip(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def _lm_model(cfg: ModelConfig) -> Model:
+    is_vlm = cfg.family == "vlm"
+
+    def init(rng):
+        return transformer.init_lm(rng, cfg)
+
+    def forward(params, batch, remat=True):
+        logits, aux, _ = transformer.lm_forward(
+            params, cfg, batch["tokens"],
+            image_embeds=batch.get("image_embeds"), remat=remat)
+        return logits
+
+    def loss_fn(params, batch, remat=True):
+        hidden, aux, _ = transformer.lm_forward(
+            params, cfg, batch["tokens"],
+            image_embeds=batch.get("image_embeds"), remat=remat,
+            return_hidden=True)
+        tgt = batch["targets"]
+        B = tgt.shape[0]
+        if is_vlm:  # image positions carry no LM loss
+            n_img = cfg.num_image_tokens
+            tgt = jnp.concatenate(
+                [jnp.zeros((B, n_img), tgt.dtype), tgt], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros((B, n_img), jnp.float32),
+                 jnp.ones((B, tgt.shape[1] - n_img), jnp.float32)], axis=1)
+        else:
+            mask = None
+        from repro.models.layers import chunked_cross_entropy
+        loss = chunked_cross_entropy(
+            hidden, tgt,
+            embedding=params["embedding"] if cfg.tie_embeddings else None,
+            lm_head=params.get("lm_head"),
+            final_softcap=cfg.final_logit_softcap, mask=mask)
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.router_aux_loss * aux / cfg.num_layers
+        return loss, {"aux": aux}
+
+    def prefill(params, batch):
+        logits, _, caches = transformer.lm_forward(
+            params, cfg, batch["tokens"],
+            image_embeds=batch.get("image_embeds"), remat=False,
+            collect_cache=True)
+        return logits, caches
+
+    def init_cache(batch_size, seq_len):
+        return transformer.init_lm_cache(cfg, batch_size, seq_len)
+
+    def decode_step(params, cache, tokens, pos):
+        return transformer.lm_decode_step(params, cfg, cache, tokens, pos)
+
+    def input_specs(shape: InputShape):
+        return lm_input_specs(cfg, shape)
+
+    return Model(cfg, init, loss_fn, forward, prefill, init_cache,
+                 decode_step, input_specs)
+
+
+def _encdec_model(cfg: ModelConfig) -> Model:
+    def init(rng):
+        return encdec.init_encdec(rng, cfg)
+
+    def forward(params, batch, remat=True):
+        enc = encdec.encode(params, cfg, batch["frames"])
+        return encdec.decode_full(params, cfg, batch["tokens"], enc,
+                                  remat=remat)
+
+    def loss_fn(params, batch, remat=True):
+        from repro.models.layers import chunked_cross_entropy
+        enc = encdec.encode(params, cfg, batch["frames"])
+        hidden = encdec.decode_full(params, cfg, batch["tokens"], enc,
+                                    remat=remat, return_hidden=True)
+        loss = chunked_cross_entropy(hidden, batch["targets"],
+                                     embedding=params["embedding"])
+        return loss, {}
+
+    def prefill(params, batch):
+        enc = encdec.encode(params, cfg, batch["frames"])
+        cache = encdec.init_encdec_cache(cfg, batch["frames"].shape[0],
+                                         batch["tokens"].shape[1])
+        cache = encdec.seed_cross_cache(params, cfg, cache, enc)
+        logits = encdec.decode_full(params, cfg, batch["tokens"], enc,
+                                    remat=False)
+        return logits, cache
+
+    def init_cache(batch_size, seq_len):
+        return encdec.init_encdec_cache(cfg, batch_size, seq_len)
+
+    def decode_step(params, cache, tokens, pos):
+        return encdec.encdec_decode_step(params, cfg, cache, tokens, pos)
+
+    def input_specs(shape: InputShape):
+        return lm_input_specs(cfg, shape)
+
+    return Model(cfg, init, loss_fn, forward, prefill, init_cache,
+                 decode_step, input_specs)
+
+
+def _mlp_model(cfg: ModelConfig) -> Model:
+    def init(rng):
+        return init_mlp_mnist(rng, cfg.d_ff, cfg.d_model, cfg.vocab_size)
+
+    def loss_fn(params, batch, remat=False):
+        return mlp_mnist_loss(params, batch["x"], batch["y"]), {}
+
+    def forward(params, batch, remat=False):
+        return mlp_mnist_logits(params, batch["x"])
+
+    def unsupported(*a, **k):
+        raise NotImplementedError("mnist-mlp has no decode path")
+
+    def input_specs(shape: InputShape):
+        B = shape.global_batch
+        return {"x": jax.ShapeDtypeStruct((B, cfg.d_ff), jnp.float32),
+                "y": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+    return Model(cfg, init, loss_fn, forward, unsupported, unsupported,
+                 unsupported, input_specs)
+
+
+def lm_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    dtype = dtype_of(cfg)
+    tok = jnp.int32
+    if shape.kind == "train" or shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct(
+                        (B, cfg.encoder_seq_len, cfg.d_model), dtype),
+                    "tokens": jax.ShapeDtypeStruct((B, S), tok),
+                    "targets": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.family == "vlm":
+            s_text = S - cfg.num_image_tokens
+            return {"image_embeds": jax.ShapeDtypeStruct(
+                        (B, cfg.num_image_tokens, cfg.d_model), dtype),
+                    "tokens": jax.ShapeDtypeStruct((B, s_text), tok),
+                    "targets": jax.ShapeDtypeStruct((B, s_text), tok)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), tok),
+                "targets": jax.ShapeDtypeStruct((B, S), tok)}
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), tok)}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "mlp":
+        return _mlp_model(cfg)
+    if cfg.family == "audio":
+        return _encdec_model(cfg)
+    return _lm_model(cfg)

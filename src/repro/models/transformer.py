@@ -1,0 +1,316 @@
+"""Unified decoder-only LM covering dense / moe / ssm / hybrid / vlm families.
+
+Layers are a ``lax.scan`` over stacked per-layer params (bounded HLO size and
+compile time at 62+ layers), with optional ``jax.checkpoint`` remat in the
+train path. Per-layer structural variation (local/global attention, hybrid
+shared-attention application) is carried by scanned flag arrays.
+
+Decode maintains functional KV/SSM caches stacked over layers.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.dist.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (embed, he_init, init_embedding, init_mlp,
+                                 mlp, rmsnorm, unembed)
+
+
+# --- per-layer init -------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        a = cfg.attention
+        p["attn_norm"] = jnp.zeros((d,), dtype)
+        p["attn"] = (attn.init_mla(ks[0], d, a, dtype) if a.use_mla
+                     else attn.init_gqa(ks[0], d, a, dtype))
+        p["ffn_norm"] = jnp.zeros((d,), dtype)
+        if fam == "moe":
+            p["moe"] = moe_lib.init_moe(ks[1], d, cfg.d_ff, cfg.moe,
+                                        gated=cfg.gated_mlp, dtype=dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.gated_mlp, dtype)
+    elif fam in ("ssm", "hybrid"):
+        p["ssm_norm"] = jnp.zeros((d,), dtype)
+        p["ssm"] = ssm_lib.init_mamba2(ks[0], d, cfg.ssm, dtype)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def _init_shared_attn_block(key, cfg: ModelConfig, dtype):
+    """Zamba2-style weight-tied attention+MLP block."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": jnp.zeros((d,), dtype),
+        "attn": attn.init_gqa(ks[0], d, cfg.attention, dtype),
+        "ffn_norm": jnp.zeros((d,), dtype),
+        "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.gated_mlp, dtype),
+    }
+
+
+def layer_flags(cfg: ModelConfig):
+    """Per-layer scanned flags."""
+    L = cfg.num_layers
+    if cfg.local_global_period:
+        pp = cfg.local_global_period
+        is_global = (jnp.arange(L) % pp) == (pp - 1)
+    else:
+        is_global = jnp.ones((L,), bool) if (cfg.attention is None
+                                             or not cfg.attention.window) \
+            else jnp.zeros((L,), bool)
+    if cfg.hybrid_attn_every:
+        apply_attn = (jnp.arange(L) % cfg.hybrid_attn_every) == \
+            (cfg.hybrid_attn_every - 1)
+    else:
+        apply_attn = jnp.zeros((L,), bool)
+    return {"is_global": is_global, "apply_attn": apply_attn}
+
+
+def init_lm(key, cfg: ModelConfig):
+    dtype = jnp.float32
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embedding": init_embedding(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = he_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                    fan_in=cfg.d_model, dtype=dtype)
+    if cfg.family == "hybrid":
+        params["shared_block"] = _init_shared_attn_block(ks[3], cfg, dtype)
+    if cfg.family == "vlm":
+        # stub projector bias marker (frontend itself is external, DESIGN §4)
+        params["img_pos"] = (0.02 * jax.random.normal(
+            ks[3], (cfg.num_image_tokens, cfg.d_model))).astype(dtype)
+    return params
+
+
+# --- layer application ------------------------------------------------------------
+
+def _apply_layer_full(lp, x, cfg: ModelConfig, flags, positions, shared_block):
+    """Full-sequence (train/prefill) layer. Returns (x, cache_seed, aux)."""
+    fam = cfg.family
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    cache_seed = None
+    if fam in ("dense", "vlm", "moe"):
+        h = rmsnorm(x, lp["attn_norm"], eps)
+        if cfg.attention.use_mla:
+            o, (ckv, kr) = attn.mla_forward(lp["attn"], h, cfg.attention,
+                                            positions=positions, eps=eps)
+            cache_seed = (ckv, kr)
+        else:
+            o, (k, v) = attn.gqa_forward(lp["attn"], h, cfg.attention,
+                                         positions=positions,
+                                         is_global=flags["is_global"])
+            cache_seed = (k, v)
+        x = x + o
+        h = rmsnorm(x, lp["ffn_norm"], eps)
+        if fam == "moe":
+            o, aux = moe_lib.moe_forward(lp["moe"], h, cfg.moe,
+                                         gated=cfg.gated_mlp)
+        else:
+            o = mlp(lp["mlp"], h, cfg.gated_mlp)
+        x = x + o
+    else:  # ssm / hybrid
+        h = rmsnorm(x, lp["ssm_norm"], eps)
+        o, (conv_st, ssm_st) = ssm_lib.mamba2_forward(lp["ssm"], h, cfg.ssm,
+                                                      eps=eps)
+        x = x + o
+        cache_seed = (conv_st, ssm_st)
+        if fam == "hybrid":
+            def with_attn(x):
+                sb = shared_block
+                h = rmsnorm(x, sb["attn_norm"], eps)
+                o, (k, v) = attn.gqa_forward(sb["attn"], h, cfg.attention,
+                                             positions=positions)
+                x = x + o
+                h = rmsnorm(x, sb["ffn_norm"], eps)
+                x = x + mlp(sb["mlp"], h, cfg.gated_mlp)
+                return x, (k, v)
+
+            def without_attn(x):
+                a = cfg.attention
+                hd = cfg.head_dim
+                B, S = x.shape[0], x.shape[1]
+                z = jnp.zeros((B, S, a.num_kv_heads, hd), x.dtype)
+                return x, (z, z)
+
+            x, (k, v) = jax.lax.cond(flags["apply_attn"], with_attn,
+                                     without_attn, x)
+            cache_seed = cache_seed + (k, v)
+    return x, cache_seed, aux
+
+
+def lm_forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
+               remat=True, collect_cache=False, return_hidden=False):
+    """tokens: (B,S_text). Returns (logits_or_hidden, aux, cache or None).
+
+    For vlm, image_embeds (B,N,d) are prepended (total seq = N + S_text).
+    return_hidden=True skips the unembed (chunked-CE training path)."""
+    dtype = dtype_of(cfg)
+    x = embed(params["embedding"], tokens, dtype) * math.sqrt(cfg.d_model)
+    if cfg.family == "vlm":
+        img = (image_embeds.astype(dtype)
+               + params["img_pos"].astype(dtype)[None])
+        x = jnp.concatenate([img, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    flags = layer_flags(cfg)
+    shared_block = params.get("shared_block")
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        lp, fl = xs
+        x, cache_seed, aux = _apply_layer_full(lp, x, cfg, fl, positions,
+                                               shared_block)
+        ys = cache_seed if collect_cache else None
+        return (x, aux_acc + aux), ys
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                    (params["layers"], flags))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux, caches
+    logits = unembed(x, embedding=params.get("embedding")
+                     if cfg.tie_embeddings else None,
+                     lm_head=params.get("lm_head"),
+                     final_softcap=cfg.final_logit_softcap)
+    return logits, aux, caches
+
+
+# --- decode ------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Zero cache pytree, stacked over layers (leading L dim)."""
+    L = cfg.num_layers
+    dtype = dtype_of(cfg)
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        a = cfg.attention
+        if a.use_mla:
+            return {
+                "ckv": jnp.zeros((L, batch, seq_len, a.kv_lora_rank), dtype),
+                "kr": jnp.zeros((L, batch, seq_len, a.qk_rope_dim), dtype),
+            }
+        hd = cfg.head_dim
+        return {
+            "k": jnp.zeros((L, batch, seq_len, a.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((L, batch, seq_len, a.num_kv_heads, hd), dtype),
+        }
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = ssm_lib.ssm_dims(cfg.d_model, s)
+    cache = {
+        "conv": jnp.zeros((L, batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((L, batch, n_heads, s.head_dim, s.d_state),
+                         jnp.float32),
+    }
+    if fam == "hybrid":
+        a = cfg.attention
+        hd = cfg.head_dim
+        cache["k"] = jnp.zeros((L, batch, seq_len, a.num_kv_heads, hd), dtype)
+        cache["v"] = jnp.zeros((L, batch, seq_len, a.num_kv_heads, hd), dtype)
+    return cache
+
+
+def cache_shardings_hints():
+    """Dim hints for cache leaves: length over data, heads over model."""
+    return {
+        "k": (None, None, "data", "model", None),
+        "v": (None, None, "data", "model", None),
+        "ckv": (None, "data", None, "model"),
+        "kr": (None, "data", None, None),
+        "conv": (None, "data", None, "model"),
+        "ssm": (None, "data", "model", None, None),
+    }
+
+
+def lm_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """tokens: (B,1) int32; pos: scalar int32. Returns (logits, new_cache)."""
+    dtype = dtype_of(cfg)
+    eps = cfg.norm_eps
+    x = embed(params["embedding"], tokens, dtype) * math.sqrt(cfg.d_model)
+    flags = layer_flags(cfg)
+    shared_block = params.get("shared_block")
+    fam = cfg.family
+
+    def body(carry, xs):
+        x = carry
+        lp, fl, cache_l = xs
+        new_cache = dict(cache_l)
+        if fam in ("dense", "vlm", "moe"):
+            h = rmsnorm(x, lp["attn_norm"], eps)
+            if cfg.attention.use_mla:
+                o, ckv, kr = attn.mla_decode(lp["attn"], h, cfg.attention,
+                                             cache_ckv=cache_l["ckv"],
+                                             cache_kr=cache_l["kr"],
+                                             pos=pos, eps=eps)
+                new_cache = {"ckv": ckv, "kr": kr}
+            else:
+                o, k, v = attn.gqa_decode(
+                    lp["attn"], h, cfg.attention, cache_k=cache_l["k"],
+                    cache_v=cache_l["v"], pos=pos,
+                    is_global=fl["is_global"],
+                    sharded_cache_chunks=cfg.decode_sharded_chunks)
+                new_cache = {"k": k, "v": v}
+            x = x + o
+            h = rmsnorm(x, lp["ffn_norm"], eps)
+            if fam == "moe":
+                o, _ = moe_lib.moe_forward(lp["moe"], h, cfg.moe,
+                                           gated=cfg.gated_mlp)
+            else:
+                o = mlp(lp["mlp"], h, cfg.gated_mlp)
+            x = x + o
+        else:
+            h = rmsnorm(x, lp["ssm_norm"], eps)
+            o, (conv_st, ssm_st) = ssm_lib.mamba2_decode(
+                lp["ssm"], h, cfg.ssm, conv_state=cache_l["conv"],
+                ssm_state=cache_l["ssm"], eps=eps)
+            x = x + o
+            new_cache = {"conv": conv_st.astype(cache_l["conv"].dtype),
+                         "ssm": ssm_st}
+            if fam == "hybrid":
+                def with_attn(args):
+                    x, k, v = args
+                    sb = shared_block
+                    h = rmsnorm(x, sb["attn_norm"], eps)
+                    o, k, v = attn.gqa_decode(sb["attn"], h, cfg.attention,
+                                              cache_k=k, cache_v=v, pos=pos)
+                    x = x + o
+                    h = rmsnorm(x, sb["ffn_norm"], eps)
+                    x = x + mlp(sb["mlp"], h, cfg.gated_mlp)
+                    return x, k, v
+
+                x, k, v = jax.lax.cond(fl["apply_attn"], with_attn,
+                                       lambda a: a,
+                                       (x, cache_l["k"], cache_l["v"]))
+                new_cache["k"] = k
+                new_cache["v"] = v
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], flags, cache))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, embedding=params.get("embedding")
+                     if cfg.tie_embeddings else None,
+                     lm_head=params.get("lm_head"),
+                     final_softcap=cfg.final_logit_softcap)
+    return logits, new_cache

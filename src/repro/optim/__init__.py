@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adam, momentum, sgd,
+                                    with_error_feedback)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = ["Optimizer", "adam", "momentum", "sgd", "with_error_feedback",
+           "constant", "cosine_decay", "warmup_cosine"]

@@ -1,0 +1,91 @@
+"""Optimizers from scratch (no optax in this container).
+
+The paper uses plain GD (``sgd``); momentum/adam are substrate options.
+``with_error_feedback`` wraps any optimizer with an EF-SGD residual
+accumulator — a beyond-paper option that compensates the OBCSAA
+compression error across rounds (Stich et al., paper's ref. [37]).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable        # params -> state
+    update: Callable      # (grads, state, params, lr) -> (new_params, state)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g.astype(p.dtype),
+                                     params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            step = jax.tree_util.tree_map(
+                lambda m, g: beta * m + g.astype(jnp.float32), new_m, grads)
+        else:
+            step = new_m
+        new = jax.tree_util.tree_map(
+            lambda p, s: p - lr * s.astype(p.dtype), params, step)
+        return new, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree_util.tree_map(jnp.copy, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(
+                g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, m_, v_: p - (lr * (m_ / bc1)
+                                   / (jnp.sqrt(v_ / bc2) + eps)).astype(
+                                       p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def with_error_feedback(compress_fn: Callable) -> Callable:
+    """EF wrapper for the FL aggregation path: maintains a per-worker
+    residual e; transmits compress(g + e); e' = (g + e) − decompressed.
+
+    compress_fn: flat -> (wire_repr, decompressed_flat). Returns a function
+    (flat_grad, residual) -> (wire_repr, new_residual)."""
+    def apply(flat_grad, residual):
+        corrected = flat_grad + residual
+        wire, decompressed = compress_fn(corrected)
+        return wire, corrected - decompressed
+
+    return apply

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# Smoke tests and benches must see 1 device (the dry-run sets 512 itself,
+# in a separate process). Keep CPU determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)
+
+# Initialize the backend NOW with 1 device: test modules that import
+# repro.launch.dryrun (which sets --xla_force_host_platform_device_count=512
+# for its own subprocess usage) must not affect the already-locked device
+# count of this test process.
+_ = jax.devices()

@@ -1,0 +1,35 @@
+"""Smoke the multi-pod dry-run machinery end-to-end (subprocess: the
+512-host-device XLA flag must not leak into this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = """
+import repro.launch.dryrun as dr
+res = dr.lower_combo("whisper-base", "decode_32k", multi_pod=False)
+assert res["status"] == "ok", res
+assert res["cost"]["flops"] > 0
+assert res["collectives"]["total_count"] > 0
+assert res["memory"]["temp_bytes"] is not None
+# long_500k rule: full-attention arch is skipped with the documented reason
+res2 = dr.lower_combo("whisper-base", "long_500k", multi_pod=False)
+assert res2["status"] == "skipped" and "sub-quadratic" in res2["reason"]
+print("DRYRUN_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_lower_compile_and_skip_rule():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"STDOUT:{r.stdout}\nSTDERR:{r.stderr[-2000:]}"
+    assert "DRYRUN_OK" in r.stdout

@@ -1,0 +1,67 @@
+"""Unit tests for the dry-run HLO collective analyzer (trip-count scaling).
+
+Uses a synthetic HLO text — no 512-device mesh needed, so this stays in the
+default 1-device test environment.
+"""
+import textwrap
+
+from repro.launch.dryrun import (_computation_multipliers,
+                                 _split_computations, parse_collective_bytes)
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step, is_scheduled=true
+
+    %inner_body.1 (arg: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+      %ar.1 = f32[8,4]{1,0} all-reduce(f32[8,4]{1,0} %x.1), replica_groups={}
+      ROOT %t.1 = (s32[], f32[8,4]) tuple(%i.1, %ar.1)
+    }
+
+    %inner_cond.1 (arg: (s32[], f32[8,4])) -> pred[] {
+      ROOT %lt.1 = pred[] compare(%i.2, %c.2), direction=LT
+    }
+
+    %outer_body.2 (arg: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+      %w.2 = (s32[], f32[8,4]) while(%tup.2), condition=%inner_cond.1, body=%inner_body.1, backend_config={"known_trip_count":{"n":"5"}}
+      %ag.2 = f32[16,4]{1,0} all-gather(f32[8,4]{1,0} %y.2), dimensions={0}
+      ROOT %t.2 = (s32[], f32[8,4]) tuple(%i.3, %z.2)
+    }
+
+    %outer_cond.2 (arg: (s32[], f32[8,4])) -> pred[] {
+      ROOT %lt.2 = pred[] compare(%i.4, %c.4), direction=LT
+    }
+
+    ENTRY %main.3 (p0: f32[8,4]) -> f32[8,4] {
+      %w.3 = (s32[], f32[8,4]) while(%tup.3), condition=%outer_cond.2, body=%outer_body.2, backend_config={"known_trip_count":{"n":"3"}}
+      %cp.3 = f32[8,4]{1,0} collective-permute(f32[8,4]{1,0} %q.3), source_target_pairs={{0,1}}
+      ROOT %r.3 = f32[8,4]{1,0} copy(%res.3)
+    }
+    """)
+
+
+def test_split_computations():
+    comps, entry = _split_computations(HLO)
+    assert entry == "main.3"
+    assert set(comps) == {"inner_body.1", "inner_cond.1", "outer_body.2",
+                          "outer_cond.2", "main.3"}
+
+
+def test_multipliers_nested_whiles():
+    comps, entry = _split_computations(HLO)
+    mult = _computation_multipliers(comps, entry)
+    assert mult["main.3"] == 1
+    assert mult["outer_body.2"] == 3
+    assert mult["inner_body.1"] == 15        # 3 x 5
+
+
+def test_collective_bytes_scaled():
+    res = parse_collective_bytes(HLO)
+    f32_8x4 = 8 * 4 * 4
+    # all-reduce in inner body: 15 executions, wire = 2x result each
+    assert res["all-reduce"]["count"] == 15
+    assert res["all-reduce"]["wire_bytes"] == 15 * 2 * f32_8x4
+    # all-gather in outer body: 3 executions; result 16x4 f32
+    assert res["all-gather"]["count"] == 3
+    assert res["all-gather"]["wire_bytes"] == 3 * 16 * 4 * 4
+    # collective-permute in entry: once
+    assert res["collective-permute"]["count"] == 1
+    assert res["total_count"] == 19

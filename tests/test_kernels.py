@@ -1,0 +1,73 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,s,d", [(8, 128, 512), (64, 256, 1024),
+                                   (128, 512, 4096), (130, 128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cs_project_sign(n, s, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n + s))
+    phi = (jax.random.normal(k1, (s, d)) / np.sqrt(s)).astype(dtype)
+    chunks = jax.random.normal(k2, (n, d)).astype(dtype)
+    got = ops.cs_project_sign(phi, chunks)
+    want = ref.cs_project_sign_ref(phi, chunks)
+    # signs must agree where the projection isn't borderline-zero
+    proj = jnp.einsum("sd,nd->ns", phi.astype(jnp.float32),
+                      chunks.astype(jnp.float32))
+    solid = jnp.abs(proj) > 1e-3
+    assert bool(jnp.all(jnp.where(solid, got == want, True)))
+    assert bool(jnp.all(jnp.abs(got) == 1.0))
+
+
+@pytest.mark.parametrize("n,d,k", [(8, 256, 5), (64, 1024, 64),
+                                   (128, 4096, 409), (3, 512, 1)])
+def test_topk_select(n, d, k):
+    x = jax.random.normal(jax.random.PRNGKey(n * d + k), (n, d))
+    got_v, got_m = ops.topk_select(x, k)
+    want_v, want_m = ref.topk_select_ref(x, k)
+    assert got_m.sum(axis=-1).max() == k and got_m.sum(axis=-1).min() == k
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v),
+                               rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("n,s,d", [(8, 128, 512), (64, 256, 1024)])
+@pytest.mark.parametrize("tau", [1.0, 0.01])
+def test_backproject(n, s, d, tau):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (n, d))
+    r = jax.random.normal(ks[1], (n, s))
+    phi = jax.random.normal(ks[2], (s, d)) / np.sqrt(s)
+    got = ops.backproject(x, r, phi, tau)
+    want = ref.backproject_ref(x, r, phi, tau)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("iters", [0, 3, 10])
+def test_biht_composition(iters):
+    n, s, d, k = 8, 256, 1024, 24
+    ks = jax.random.split(jax.random.PRNGKey(iters), 3)
+    phi = jax.random.normal(ks[0], (s, d)) / np.sqrt(s)
+    x_true, _ = ref.topk_select_ref(jax.random.normal(ks[1], (n, d)), k)
+    y = ref.sign_pm1(jnp.einsum("sd,nd->ns", phi, x_true))
+    got = ops.biht(y, phi, k, iters, 1.0)
+    want = ref.biht_ref(y, phi, k, iters, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_biht_recovers_direction():
+    n, s, d, k = 4, 512, 1024, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    phi = jax.random.normal(ks[0], (s, d)) / np.sqrt(s)
+    x_true, _ = ref.topk_select_ref(jax.random.normal(ks[1], (n, d)), k)
+    y = ref.sign_pm1(jnp.einsum("sd,nd->ns", phi, x_true))
+    xh = ops.biht(y, phi, k, 30, 1.0)
+    xn = x_true / jnp.linalg.norm(x_true, axis=-1, keepdims=True)
+    cos = jnp.sum(xh * xn, axis=-1)
+    assert float(cos.min()) > 0.95

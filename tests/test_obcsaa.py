@@ -1,0 +1,155 @@
+"""OBCSAA invariants: quantization, power control (eq. 10-11), RIP,
+Lemma 1 bound vs empirical error, magnitude tracking, comm stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.error_floor import AnalysisConstants, lemma1_error_bound
+from repro.core.measurement import (make_phi, reconstruction_constant,
+                                    rip_constant_estimate)
+from repro.core.obcsaa import OBCSAAConfig, comm_stats, compress_chunks, simulate_round
+from repro.core.power_control import feasible, max_bt, power_factors, tx_power
+from repro.core.quantize import pack_bits, sign_pm1, unpack_bits
+from repro.core.sparsify import topk_sparsify
+
+CFG = OBCSAAConfig(chunk=1024, measure=512, topk=64, biht_iters=25)
+
+
+def _worker_grads(U=6, D=2048, seed=0):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    base = jnp.zeros((D,)).at[jax.random.choice(k0, D, (64,),
+                                                replace=False)].set(
+        jax.random.normal(k1, (64,)))
+    return base[None] + 0.05 * jax.random.normal(k2, (U, D))
+
+
+def test_compression_symbols_are_pm1():
+    g = _worker_grads()[0]
+    signs, mags = compress_chunks(CFG, jnp.pad(g, (0, 0)))
+    assert bool(jnp.all(jnp.abs(signs) == 1.0))
+    assert signs.shape == (2048 // CFG.chunk, CFG.measure)
+    assert bool(jnp.all(mags > 0))
+
+
+def test_power_constraint_gradient_independent():
+    """Eq. 11: transmit power depends only on (β, K, b, h) — never on g."""
+    U = 5
+    h = jnp.asarray([0.3, 1.2, 0.7, 2.0, 0.05])
+    kw = jnp.full((U,), 3000.0)
+    beta = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0])
+    bt = max_bt(beta, kw, h, 10.0)
+    assert bool(feasible(beta, kw, bt, h, 10.0))
+    # tightest worker hits the boundary exactly
+    p = tx_power(beta, kw, bt, h)
+    assert np.isclose(float(jnp.max(p)), 10.0, rtol=1e-5)
+    # any larger b_t violates
+    assert not bool(feasible(beta, kw, bt * 1.01, h, 10.0))
+
+
+def test_channel_inversion():
+    """p_i h_i = β_i K_i b_t: fading is perfectly pre-compensated (eq. 12)."""
+    h = jnp.asarray([0.5, 2.0])
+    kw = jnp.asarray([10.0, 20.0])
+    beta = jnp.ones((2,))
+    p = power_factors(beta, kw, 0.3, h)
+    np.testing.assert_allclose(np.asarray(p * h), np.asarray(beta * kw * 0.3),
+                               rtol=1e-6)
+
+
+def test_rip_constant_reasonable():
+    phi = make_phi(0, 512, 1024)
+    delta = float(rip_constant_estimate(phi, sparsity=32, n_trials=32))
+    assert 0.0 < delta < 0.6
+
+
+def test_reconstruction_constant_monotone():
+    cs = [reconstruction_constant(d) for d in (0.05, 0.15, 0.3)]
+    assert cs[0] < cs[1] < cs[2]
+    with pytest.raises(ValueError):
+        reconstruction_constant(0.9)  # violates delta <= sqrt(2)-1 regime
+
+
+def test_lemma1_bound_dominates_empirical_error():
+    """Empirical ||ĝ − ḡ||² should sit below the Lemma 1 bound with the
+    constants instantiated from the actual gradients."""
+    U, D = 6, 2048
+    grads = _worker_grads(U, D)
+    kw = jnp.ones((U,))
+    beta = jnp.ones((U,))
+    bt = 1.0
+    ghat, _ = simulate_round(CFG, grads, kw, beta, bt, jnp.ones((U,)),
+                             jax.random.PRNGKey(1))
+    gbar = jnp.mean(grads, axis=0)
+    err = float(jnp.sum((ghat - gbar) ** 2))
+    G = float(jnp.max(jnp.linalg.norm(grads, axis=-1)))
+    const = AnalysisConstants(G=G, delta=0.3)
+    bound = float(lemma1_error_bound(
+        const, D=D, S=CFG.measure * 2, kappa=CFG.topk * 2, beta=beta,
+        k_weights=kw, b_t=bt, noise_var=CFG.noise_var))
+    assert err < bound
+
+
+def test_magnitude_tracking_restores_scale():
+    U, D = 6, 2048
+    grads = _worker_grads(U, D)
+    kw, beta = jnp.ones((U,)), jnp.ones((U,))
+    ghat, _ = simulate_round(CFG, grads, kw, beta, 1.0, jnp.ones((U,)),
+                             jax.random.PRNGKey(2))
+    sp = jax.vmap(lambda g: topk_sparsify(g, CFG.topk * 2)[0])(grads)
+    target_norm = float(jnp.linalg.norm(jnp.mean(sp, axis=0)))
+    got = float(jnp.linalg.norm(ghat))
+    assert 0.5 * target_norm < got < 2.0 * target_norm
+
+
+def test_obcsaa_beats_no_aggregation_direction():
+    U, D = 8, 2048
+    grads = _worker_grads(U, D, seed=3)
+    ghat, _ = simulate_round(CFG, grads, jnp.ones((U,)), jnp.ones((U,)), 1.0,
+                             jnp.ones((U,)), jax.random.PRNGKey(3))
+    gbar = jnp.mean(grads, axis=0)
+    cos = float(jnp.dot(ghat, gbar)
+                / (jnp.linalg.norm(ghat) * jnp.linalg.norm(gbar)))
+    assert cos > 0.65
+
+
+def test_pack_unpack_roundtrip():
+    signs = sign_pm1(jax.random.normal(jax.random.PRNGKey(0), (1024,)))
+    packed = pack_bits(signs)
+    assert packed.size == 128
+    np.testing.assert_array_equal(np.asarray(unpack_bits(packed, 1024)),
+                                  np.asarray(signs))
+
+
+def test_comm_stats():
+    st = comm_stats(OBCSAAConfig(chunk=4096, measure=1024, topk=400), 50890)
+    assert st["n_chunks"] == 13
+    assert st["symbols_per_round"] == 13 * 1024 + 13
+    assert st["compression_ratio"] > 3.8
+
+
+def test_worker_scheduling_zeroes_unscheduled():
+    """β_i = 0 workers contribute nothing (their p_i = 0)."""
+    U, D = 4, 1024
+    grads = _worker_grads(U, D, seed=4)
+    kw = jnp.ones((U,))
+    beta_all = jnp.ones((U,))
+    beta_one = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    # make worker 0's gradient wildly different
+    grads = grads.at[0].mul(-1.0)
+    g_all, _ = simulate_round(CFG, grads, kw, beta_all, 1.0, jnp.ones((U,)),
+                              jax.random.PRNGKey(5))
+    g_one, _ = simulate_round(CFG, grads, kw, beta_one, 1.0, jnp.ones((U,)),
+                              jax.random.PRNGKey(5))
+    sp0 = topk_sparsify(grads[0], CFG.topk * 2)[0]
+
+    def cos(a, b):
+        return float(jnp.dot(a, b)
+                     / (jnp.linalg.norm(a) * jnp.linalg.norm(b) + 1e-12))
+
+    # only worker 0 was heard: its direction dominates the β=e_0 round and
+    # is much weaker in the all-scheduled round (worker 0's gradient is the
+    # negation of the shared signal, so the average cancels it)
+    assert cos(g_one, sp0) > 0.5
+    assert cos(g_one, sp0) > cos(g_all, sp0) + 0.3
+    assert not np.allclose(np.asarray(g_all), np.asarray(g_one))

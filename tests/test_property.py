@@ -1,0 +1,76 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.power_control import feasible, max_bt, tx_power
+from repro.core.quantize import pack_bits, sign_pm1, unpack_bits
+from repro.core.sparsify import topk_sparsify, topk_sparsify_chunked
+from repro.models.layers import chunked_cross_entropy
+from repro.models.registry import cross_entropy
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 63), st.integers(0, 2 ** 31 - 1))
+def test_topk_keeps_exactly_k_and_largest(k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    sx, mask = topk_sparsify(x, k)
+    assert int(mask.sum()) == k
+    kept_min = float(jnp.min(jnp.where(mask, jnp.abs(x), jnp.inf)))
+    dropped_max = float(jnp.max(jnp.where(mask, -jnp.inf, jnp.abs(x))))
+    assert kept_min >= dropped_max - 1e-7
+    np.testing.assert_array_equal(np.asarray(sx != 0), np.asarray(mask))
+
+
+@given(st.integers(1, 15), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_topk_chunked_per_chunk_budget(k, nc, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (nc * 32,))
+    _, mask = topk_sparsify_chunked(x, min(k, 32), 32)
+    per_chunk = np.asarray(mask).reshape(nc, 32).sum(axis=1)
+    assert (per_chunk == min(k, 32)).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_sign_never_zero(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,))
+    x = x.at[:7].set(0.0)
+    s = sign_pm1(x)
+    assert bool(jnp.all(jnp.abs(s) == 1.0))
+
+
+@given(st.integers(1, 16).map(lambda n: n * 8), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(n, seed):
+    s = sign_pm1(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+    assert np.array_equal(np.asarray(unpack_bits(pack_bits(s), n)),
+                          np.asarray(s))
+
+
+@given(st.integers(2, 12), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.1, 100.0))
+def test_max_bt_is_tight_and_feasible(u, seed, pmax):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(np.abs(rng.normal(size=u)) + 1e-3, jnp.float32)
+    kw = jnp.asarray(rng.uniform(1, 100, u), jnp.float32)
+    beta = jnp.asarray((rng.random(u) > 0.3).astype(np.float32))
+    if float(beta.sum()) == 0:
+        beta = beta.at[0].set(1.0)
+    bt = max_bt(beta, kw, h, pmax)
+    assert bool(feasible(beta, kw, bt, h, pmax))
+    p = tx_power(beta, kw, bt, h)
+    assert np.isclose(float(jnp.max(p)), pmax, rtol=1e-4)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_chunked_ce_equals_dense_ce(b, nb, seed):
+    """The chunked-CE memory optimization is mathematically exact."""
+    S, V, d = nb * 16, 37, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (b, S, d))
+    emb = jax.random.normal(ks[1], (V, d))
+    tgt = jax.random.randint(ks[2], (b, S), 0, V)
+    dense = cross_entropy(x @ emb.T, tgt)
+    chunked = chunked_cross_entropy(x, tgt, embedding=emb, seq_chunk=16)
+    np.testing.assert_allclose(float(dense), float(chunked), rtol=1e-5)

@@ -1,0 +1,61 @@
+"""1-bit CS decoders: exact-sparse recovery, noise robustness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.measurement import make_phi
+from repro.core.reconstruction import biht_sign, hard_threshold, iht
+
+
+def sparse_vec(key, d, k):
+    k1, k2 = jax.random.split(key)
+    idx = jax.random.choice(k1, d, (k,), replace=False)
+    return jnp.zeros((d,)).at[idx].set(jax.random.normal(k2, (k,)))
+
+
+def test_hard_threshold_keeps_k():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
+    h = hard_threshold(x, 17)
+    assert (np.asarray(h != 0).sum(axis=-1) == 17).all()
+
+
+@pytest.mark.parametrize("d,s,k", [(512, 256, 16), (1024, 512, 32)])
+def test_iht_exact_recovery(d, s, k):
+    phi = make_phi(3, s, d)
+    x = sparse_vec(jax.random.PRNGKey(5), d, k)
+    xh = iht(phi @ x, phi, k, iters=50, tau=1.0)
+    assert float(jnp.linalg.norm(xh - x) / jnp.linalg.norm(x)) < 1e-3
+
+
+def test_iht_noise_robust():
+    d, s, k = 1024, 512, 24
+    phi = make_phi(4, s, d)
+    x = sparse_vec(jax.random.PRNGKey(6), d, k)
+    y = phi @ x + 0.01 * jax.random.normal(jax.random.PRNGKey(7), (s,))
+    xh = iht(y, phi, k, iters=50)
+    assert float(jnp.linalg.norm(xh - x) / jnp.linalg.norm(x)) < 0.1
+
+
+@pytest.mark.parametrize("d,s,k", [(1024, 512, 16), (2048, 1024, 32)])
+def test_biht_direction_recovery(d, s, k):
+    """1-bit measurements are scale-invariant: BIHT recovers direction."""
+    phi = make_phi(8, s, d)
+    x = sparse_vec(jax.random.PRNGKey(9), d, k)
+    y = jnp.where(phi @ x >= 0, 1.0, -1.0)
+    xh = biht_sign(y, phi, k, iters=40)
+    xn = x / jnp.linalg.norm(x)
+    assert float(jnp.dot(xh, xn)) > 0.95
+    assert np.isclose(float(jnp.linalg.norm(xh)), 1.0, rtol=1e-5)
+
+
+def test_biht_batched_rows_independent():
+    d, s, k = 512, 256, 8
+    phi = make_phi(10, s, d)
+    xs = jnp.stack([sparse_vec(jax.random.PRNGKey(i), d, k)
+                    for i in (1, 2, 3)])
+    ys = jnp.where(jnp.einsum("sd,nd->ns", phi, xs) >= 0, 1.0, -1.0)
+    batched = biht_sign(ys, phi, k, iters=20)
+    single = jnp.stack([biht_sign(ys[i], phi, k, iters=20) for i in range(3)])
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(single),
+                               atol=1e-5)

@@ -1,0 +1,73 @@
+"""P2 solvers: Algorithm 1 (enumeration) vs Algorithm 2 (ADMM) vs greedy."""
+import numpy as np
+import pytest
+
+from repro.core.error_floor import AnalysisConstants
+from repro.core.scheduling import (Problem, _rt, admm_solve, enumerate_solve,
+                                   greedy_solve, optimal_bt)
+
+
+def make_problem(U=6, seed=0, rho1=200.0, G=1.0):
+    rng = np.random.default_rng(seed)
+    return Problem(h=np.abs(rng.normal(size=U)) + 1e-3,
+                   k_weights=np.full(U, 3000.0), p_max=10.0, noise_var=1e-4,
+                   D=50890, S=1000, kappa=1000,
+                   const=AnalysisConstants(rho1=rho1, G=G))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_enum_is_optimal_vs_random(seed):
+    prob = make_problem(seed=seed)
+    beta, bt, r = enumerate_solve(prob)
+    rng = np.random.default_rng(seed + 100)
+    for _ in range(50):
+        b = (rng.random(prob.U) > 0.5).astype(np.float64)
+        if b.sum() == 0:
+            continue
+        r_rand = _rt(prob, b, optimal_bt(prob, b))
+        assert r <= r_rand + 1e-9
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_admm_close_to_enum(seed):
+    prob = make_problem(seed=seed)
+    _, _, r_enum = enumerate_solve(prob)
+    _, _, r_admm = admm_solve(prob)
+    assert r_admm <= r_enum * 1.10 + 1e-6   # paper: ADMM suboptimal but close
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 5])
+def test_greedy_equals_enum_for_equal_k(seed):
+    """With equal K_i the optimum is a prefix of the channel-cap order."""
+    prob = make_problem(seed=seed)
+    _, _, r_enum = enumerate_solve(prob)
+    _, _, r_greedy = greedy_solve(prob)
+    assert np.isclose(r_enum, r_greedy, rtol=1e-9)
+
+
+def test_bt_sits_on_power_boundary():
+    prob = make_problem()
+    beta = np.ones(prob.U)
+    bt = optimal_bt(prob, beta)
+    p = (prob.k_weights * bt / prob.h) ** 2
+    assert np.isclose(p.max(), prob.p_max, rtol=1e-9)
+    # R_t decreasing in b_t below the boundary
+    assert _rt(prob, beta, bt) <= _rt(prob, beta, bt * 0.5)
+
+
+def test_scheduling_tradeoff_rho1():
+    """Large ρ₁ (costly exclusion) schedules everyone; tiny ρ₁ with large G
+    (costly sparsification error per worker) schedules fewer."""
+    all_in = enumerate_solve(make_problem(rho1=500.0, G=0.5))[0]
+    assert all_in.sum() == len(all_in)
+    few = enumerate_solve(make_problem(rho1=0.01, G=10.0))[0]
+    assert few.sum() < len(few)
+
+
+def test_admm_scales_to_large_u():
+    prob = make_problem(U=64, seed=9)
+    beta, bt, r = admm_solve(prob)
+    assert beta.shape == (64,)
+    assert bt > 0 and np.isfinite(r)
+    p = (prob.k_weights * beta * bt / prob.h) ** 2
+    assert (p <= prob.p_max * (1 + 1e-6)).all()

@@ -1,0 +1,111 @@
+"""Data pipeline, optimizers, checkpointing, error floor closed forms."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.core.error_floor import (AnalysisConstants, bt_term,
+                                    lemma1_error_bound, rt_objective,
+                                    theorem1_rate)
+from repro.data import load_mnist, partition_workers, token_stream
+from repro.optim import adam, momentum, sgd, with_error_feedback
+from repro.optim.schedules import cosine_decay, warmup_cosine
+
+
+def test_synthetic_mnist_deterministic_and_learnable():
+    x1, y1, xt, yt = load_mnist()
+    x2, y2, _, _ = load_mnist()
+    assert x1.shape == (60000, 784) and xt.shape == (10000, 784)
+    np.testing.assert_array_equal(x1[:100], x2[:100])
+    assert 0 <= x1.min() and x1.max() <= 1.0
+    assert set(np.unique(y1)) == set(range(10))
+
+
+def test_partition_iid_and_noniid():
+    x, y, _, _ = load_mnist()
+    wx, wy = partition_workers(x, y, 4, 100, iid=True, seed=0)
+    assert wx.shape == (4, 100, 784)
+    _, wy_n = partition_workers(x, y, 4, 500, iid=False, seed=0)
+    # non-iid: majority classes dominate
+    for w in range(4):
+        major = {(2 * w) % 10, (2 * w + 1) % 10}
+        frac = np.isin(wy_n[w], list(major)).mean()
+        assert frac > 0.4
+
+
+def test_token_stream_shapes():
+    t, g = token_stream(4, 32, 100)
+    assert t.shape == (4, 32) and g.shape == (4, 32)
+    assert t.max() < 100
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum", "adam"])
+def test_optimizers_descend_quadratic(opt_name):
+    opt = {"sgd": sgd, "momentum": momentum, "adam": adam}[opt_name]()
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params, 0.05)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_error_feedback_accumulates_residual():
+    def comp(flat):
+        q = jnp.where(jnp.abs(flat) >= jnp.max(jnp.abs(flat)), flat, 0.0)
+        return q, q
+
+    ef = with_error_feedback(comp)
+    g = jnp.asarray([1.0, 0.6, 0.3])
+    wire, resid = ef(g, jnp.zeros(3))
+    np.testing.assert_allclose(np.asarray(resid), [0.0, 0.6, 0.3])
+    wire2, resid2 = ef(g, resid)
+    # accumulated residual promotes the second coordinate
+    assert float(wire2[1]) != 0.0
+
+
+def test_schedules():
+    s = cosine_decay(1.0, 100)
+    assert float(s(0)) == pytest.approx(1.0)
+    assert float(s(100)) == pytest.approx(0.1, abs=1e-6)
+    w = warmup_cosine(1.0, 10, 110)
+    assert float(w(5)) == pytest.approx(0.5)
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 7, tree)
+        assert latest_step(d) == 7
+        back = restore(d, 7, tree)
+        np.testing.assert_array_equal(np.asarray(back["a"]),
+                                      np.asarray(tree["a"]))
+        assert back["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_theorem1_terms_positive_and_monotone():
+    c = AnalysisConstants()
+    common = dict(D=50890, S=1000, kappa=1000, k_weights=np.full(10, 3000.0),
+                  b_t=0.001, noise_var=1e-4)
+    full = lemma1_error_bound(c, beta=np.ones(10), **common)
+    # larger kappa -> smaller error (Remark 1)
+    smaller = lemma1_error_bound(
+        c, beta=np.ones(10), D=50890, S=1000, kappa=5000,
+        k_weights=np.full(10, 3000.0), b_t=0.001, noise_var=1e-4)
+    assert float(smaller) < float(full)
+    # larger S -> smaller error (Remark 1)
+    bigger_s = lemma1_error_bound(
+        c, beta=np.ones(10), D=50890, S=10000, kappa=1000,
+        k_weights=np.full(10, 3000.0), b_t=0.001, noise_var=1e-4)
+    assert float(bigger_s) < float(full)
+    bt = bt_term(c, beta=np.ones(10), **common)
+    rt = rt_objective(c, beta=np.ones(10), **common)
+    assert float(rt) == pytest.approx(2 * c.L * float(bt), rel=1e-6)
+    rate = theorem1_rate(c, T=100, f0_minus_fstar=1.0,
+                         bt_sum=100 * float(bt))
+    assert rate > 0
