@@ -4,6 +4,7 @@ from repro.core.error_floor import (AnalysisConstants, bt_term,
                                     theorem1_rate)
 from repro.core.obcsaa import (OBCSAAConfig, comm_stats, compress_chunks,
                                reconstruct_chunks, shardmap_aggregate,
+                               shardmap_compress, shardmap_reconstruct,
                                simulate_round)
 from repro.core.scheduling import (Problem, admm_solve, enumerate_solve,
                                    greedy_solve, optimal_bt)
@@ -12,5 +13,6 @@ __all__ = [
     "AnalysisConstants", "OBCSAAConfig", "Problem", "admm_solve", "bt_term",
     "comm_stats", "compress_chunks", "enumerate_solve", "greedy_solve",
     "lemma1_error_bound", "optimal_bt", "reconstruct_chunks", "rt_objective",
-    "shardmap_aggregate", "simulate_round", "theorem1_rate",
+    "shardmap_aggregate", "shardmap_compress", "shardmap_reconstruct",
+    "simulate_round", "theorem1_rate",
 ]

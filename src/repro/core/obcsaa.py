@@ -31,6 +31,7 @@ from repro.core.quantize import sign_pm1
 from repro.core.reconstruction import reconstruct
 from repro.core.sparsify import (pad_to_chunks, topk_sparsify,
                                  topk_sparsify_bisect)
+from repro.dist import collectives as coll
 from repro.dist.sharding import constrain
 
 
@@ -137,29 +138,59 @@ def simulate_round(cfg: OBCSAAConfig, grads_flat: jnp.ndarray,
 
 # --- distributed mode (inside shard_map over worker axes) -------------------------
 
+def shardmap_compress(cfg: OBCSAAConfig, local_flat: jnp.ndarray,
+                      worker_axes, *, k_weight, beta_i, b_t, phi=None,
+                      wire_dtype=None):
+    """Worker-side half, INSIDE shard_map(manual over worker_axes).
+
+    Compress this worker's local gradient (eq. 7), scale by the power
+    factor (eq. 10-11), and superpose over the MAC: the psum over
+    ``worker_axes`` IS the over-the-air sum (eq. 12). ``wire_dtype``
+    optionally narrows the transmitted symbols (±w each), halving wire
+    bytes with bf16.
+
+    Returns ``(y, ksum, mag_sum)``: the raw received aggregate, the
+    weight normaliser Σ_i K_i β_i, and the weighted magnitude sum (None
+    unless ``cfg.magnitude_tracking``) — everything the PS-side
+    ``shardmap_reconstruct`` needs."""
+    signs, mags = compress_chunks(cfg, local_flat, phi)
+    wd = wire_dtype or signs.dtype
+    w = (k_weight * beta_i * b_t).astype(wd)
+    y = coll.psum(signs.astype(wd) * w, worker_axes)    # eq. (12)
+    ksum = coll.psum(k_weight * beta_i, worker_axes)
+    mag_sum = (coll.psum(mags * (k_weight * beta_i).astype(mags.dtype),
+                         worker_axes)
+               if cfg.magnitude_tracking else None)
+    return y, ksum, mag_sum
+
+
+def shardmap_reconstruct(cfg: OBCSAAConfig, y: jnp.ndarray, ksum,
+                         mag_sum=None, *, b_t, noise_key,
+                         phi=None) -> jnp.ndarray:
+    """PS-side half: AWGN + post-processing (eq. 13) + 1-bit CS decode.
+
+    Noise is added once at the PS — every shard folds the same key, so the
+    (replicated) draw is identical and the result stays replicated."""
+    denom = jnp.maximum(ksum * b_t, 1e-12)
+    noise = chan.draw_noise(noise_key, y.shape, cfg.noise_var)
+    y = (y.astype(jnp.float32) + noise) / denom         # eq. (13)
+    mbar = (mag_sum / jnp.maximum(ksum, 1e-12)
+            if (cfg.magnitude_tracking and mag_sum is not None) else None)
+    return reconstruct_chunks(cfg, y, mbar, phi)
+
+
 def shardmap_aggregate(cfg: OBCSAAConfig, local_flat: jnp.ndarray,
                        worker_axes, *, k_weight, beta_i, b_t, n_workers: int,
                        noise_key, phi=None) -> jnp.ndarray:
     """Called INSIDE shard_map(manual over worker_axes). local_flat: (D_pad,)
     is this worker's local gradient; returns the reconstructed global
-    gradient (identical on all workers, like the PS broadcast).
-
-    The psum over ``worker_axes`` is the over-the-air superposition; AWGN is
-    added once at the PS (same key on every shard -> identical noise)."""
-    signs, mags = compress_chunks(cfg, local_flat, phi)
-    w = (k_weight * beta_i * b_t).astype(signs.dtype)
-    contrib = signs * w
-    y = jax.lax.psum(contrib, worker_axes)          # over-the-air sum, eq. (12)
-    ksum = jax.lax.psum(k_weight * beta_i, worker_axes)
-    denom = jnp.maximum(ksum * b_t, 1e-12)
-    noise = chan.draw_noise(noise_key, y.shape, cfg.noise_var)
-    y = (y + noise) / denom                         # eq. (13)
-    if cfg.magnitude_tracking:
-        mbar = jax.lax.psum(mags * (k_weight * beta_i).astype(mags.dtype),
-                            worker_axes) / jnp.maximum(ksum, 1e-12)
-    else:
-        mbar = None
-    return reconstruct_chunks(cfg, y, mbar, phi)
+    gradient (identical on all workers, like the PS broadcast)."""
+    del n_workers  # implied by worker_axes; kept for call-site stability
+    y, ksum, mag_sum = shardmap_compress(cfg, local_flat, worker_axes,
+                                         k_weight=k_weight, beta_i=beta_i,
+                                         b_t=b_t, phi=phi)
+    return shardmap_reconstruct(cfg, y, ksum, mag_sum, b_t=b_t,
+                                noise_key=noise_key, phi=phi)
 
 
 def comm_stats(cfg: OBCSAAConfig, D: int) -> dict:

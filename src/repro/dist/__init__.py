@@ -1,0 +1,25 @@
+"""Distributed execution substrate.
+
+``repro.dist`` is the layer between the paper's math (``repro.core``) and
+physical meshes (``repro.launch.mesh``):
+
+- ``repro.dist.sharding`` — mesh-aware sharding-constraint + inference
+  helpers (``constrain``, ``best_spec``, ``infer_param_sharding``) used by
+  every model family and by the step builders.
+- ``repro.dist.collectives`` — worker-axis collectives. The over-the-air
+  MAC superposition (paper eq. 8-12) IS ``psum`` over the mesh axes that
+  enumerate FL workers (DESIGN.md §3).
+- ``repro.dist.compat`` — forward-compat shims: the codebase is written
+  against the jax>=0.6 sharding surface (``jax.shard_map``,
+  ``jax.set_mesh``, ``jax.sharding.get_abstract_mesh``); on older jax
+  those names are backported here. Installed on import, idempotent.
+"""
+from repro.dist import compat as _compat
+
+_compat.install()
+
+from repro.dist import collectives  # noqa: E402
+from repro.dist.sharding import (best_spec, constrain,  # noqa: E402
+                                 infer_param_sharding)
+
+__all__ = ["best_spec", "collectives", "constrain", "infer_param_sharding"]

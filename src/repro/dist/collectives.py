@@ -1,0 +1,80 @@
+"""Worker-axis collectives — the over-the-air MAC primitives.
+
+The paper's analog superposition (eq. 8-12) is not *modeled by* a psum, it
+*is* the psum over the mesh axes that enumerate FL workers (DESIGN.md §3):
+every worker transmits its power-scaled ±1 measurement symbols and the
+multiple-access channel adds them. ``obcsaa.shardmap_compress`` /
+``shardmap_reconstruct`` call through these wrappers so the identical code
+runs on the 2-axis ``(data, model)`` host mesh and the 3-axis
+``(pod, data, model)`` production mesh.
+
+All wrappers normalise the axis argument (str | tuple | empty) and treat
+"no worker axes" as a single-worker federation: ``psum`` is then the
+identity, ``axis_index`` 0, ``axis_size`` 1 — which makes the unit tests
+and the single-host simulation exercise the same call sites.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def norm_axes(axes) -> tuple:
+    """Normalise an axis argument to a tuple of names."""
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+def _one_or_tuple(axes: tuple):
+    return axes if len(axes) > 1 else axes[0]
+
+
+def psum(x, axes):
+    """Sum over the worker axes: the MAC superposition (eq. 12)."""
+    axes = norm_axes(axes)
+    if not axes:
+        return x
+    return jax.lax.psum(x, _one_or_tuple(axes))
+
+
+def pmean(x, axes):
+    axes = norm_axes(axes)
+    if not axes:
+        return x
+    return jax.lax.pmean(x, _one_or_tuple(axes))
+
+
+def all_gather(x, axes, *, axis: int = 0, tiled: bool = False):
+    """Gather per-worker values (digital-baseline aggregation / debugging —
+    the analog path never needs it; see DESIGN.md §3)."""
+    axes = norm_axes(axes)
+    if not axes:
+        return x if tiled else jnp.expand_dims(x, axis)
+    return jax.lax.all_gather(x, _one_or_tuple(axes), axis=axis, tiled=tiled)
+
+
+def axis_index(axes):
+    """This worker's linear index over the (possibly compound) worker axes."""
+    axes = norm_axes(axes)
+    if not axes:
+        return jnp.zeros((), jnp.int32)
+    return jax.lax.axis_index(_one_or_tuple(axes))
+
+
+def axis_size(axes, mesh=None) -> int:
+    """Static worker count, from the mesh when given else the trace env."""
+    axes = norm_axes(axes)
+    if not axes:
+        return 1
+    if mesh is not None:
+        n = 1
+        for ax in axes:
+            n *= dict(mesh.shape)[ax]
+        return n
+    n = 1
+    for ax in axes:
+        n *= jax.lax.psum(1, ax)
+    return n

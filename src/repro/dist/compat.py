@@ -1,0 +1,173 @@
+"""Forward-compat shims for the jax>=0.6 sharding API on older jax.
+
+The repo targets the modern surface — ``jax.shard_map(f, mesh=...,
+axis_names={...}, check_vma=...)``, ``with jax.set_mesh(mesh): ...`` and
+``jax.sharding.get_abstract_mesh()`` — but must also run on jax 0.4.x where
+``shard_map`` lives in ``jax.experimental`` (with ``auto``/``check_rep``
+instead of ``axis_names``/``check_vma``) and the other two names don't
+exist at all. ``install()`` fills exactly the missing names; on a jax that
+already has them it does nothing.
+
+The shims keep two pieces of thread-local state that old jax has no query
+for: the ambient mesh (entered via ``set_mesh``) and the set of axis names
+currently manual because tracing happens inside a ``shard_map`` body. Both
+are consumed by ``repro.dist.sharding.constrain`` and by the MoE dispatch's
+``get_abstract_mesh().axis_types`` probe.
+"""
+from __future__ import annotations
+
+import threading
+from functools import wraps
+
+import jax
+
+_TLS = threading.local()
+
+# True when install() had to backport shard_map (jax 0.4.x). The legacy
+# SPMD partitioner aborts on sharding constraints inside a partial-manual
+# shard_map body (manual-subgroup mismatch), so `constrain` must degrade
+# to a no-op there; native jax.shard_map handles them fine.
+LEGACY_SHARD_MAP = False
+
+
+def _manual_stack():
+    stack = getattr(_TLS, "manual", None)
+    if stack is None:
+        stack = []
+        _TLS.manual = stack
+    return stack
+
+
+def current_mesh():
+    """The mesh entered via ``set_mesh`` in this thread, or None."""
+    return getattr(_TLS, "mesh", None)
+
+
+def manual_axis_names() -> frozenset:
+    """Axis names manual in the current trace (inside shard_map bodies)."""
+    out = set()
+    for s in _manual_stack():
+        out |= s
+    return frozenset(out)
+
+
+class _SetMesh:
+    """Return object of the ``set_mesh`` shim.
+
+    Like real ``jax.set_mesh``, the ambient mesh is set EAGERLY at call
+    time, so the plain statement form ``jax.set_mesh(mesh)`` works. Using
+    it as a context manager additionally enters the legacy ``Mesh``
+    context (bare-PartitionSpec constraints on 0.4.x) and restores the
+    previous ambient mesh on exit."""
+
+    def __init__(self, mesh):
+        self._prev = getattr(_TLS, "mesh", None)
+        self._mesh = mesh
+        _TLS.mesh = mesh
+
+    def __enter__(self):
+        if self._mesh is not None:
+            self._mesh.__enter__()
+        return self._mesh
+
+    def __exit__(self, *exc):
+        if self._mesh is not None:
+            self._mesh.__exit__(*exc)
+        _TLS.mesh = self._prev
+        return False
+
+
+def set_mesh(mesh):
+    """Backport of ``jax.set_mesh`` (statement and context-manager forms)."""
+    return _SetMesh(mesh)
+
+
+class _AbstractMeshView:
+    """Duck-type of ``jax.sharding.AbstractMesh`` for jax 0.4.x.
+
+    Exposes the attributes the codebase reads (``empty``, ``axis_names``,
+    ``shape``, ``axis_types``) plus ``_mesh`` so the ``shard_map`` shim can
+    unwrap it back to the concrete Mesh."""
+
+    def __init__(self, mesh, manual=frozenset()):
+        self._mesh = mesh
+        self._manual = frozenset(manual)
+
+    @property
+    def empty(self):
+        return self._mesh is None or not self._mesh.axis_names
+
+    @property
+    def axis_names(self):
+        return self._mesh.axis_names if self._mesh is not None else ()
+
+    @property
+    def shape(self):
+        return self._mesh.shape if self._mesh is not None else {}
+
+    @property
+    def axis_types(self):
+        return tuple("Manual" if a in self._manual else "Auto"
+                     for a in self.axis_names)
+
+    def __repr__(self):
+        return f"_AbstractMeshView({self._mesh!r}, manual={set(self._manual)})"
+
+
+def get_abstract_mesh():
+    """Backport of ``jax.sharding.get_abstract_mesh``."""
+    return _AbstractMeshView(current_mesh(), manual_axis_names())
+
+
+def _unwrap(mesh):
+    return getattr(mesh, "_mesh", mesh)
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+              axis_names=None, check_vma=None, check_rep=None, auto=None):
+    """Backport of ``jax.shard_map`` onto ``jax.experimental.shard_map``.
+
+    ``axis_names`` (modern: axes that are MANUAL) selects partial-auto
+    mode natively; the 0.4.x SPMD partitioner aborts on several ops inside
+    partial-manual bodies ("Check failed: ...IsManualSubgroup..."), so the
+    legacy lowering goes FULL manual instead: axes the caller wanted auto
+    are left unmentioned by the in/out specs and therefore replicated.
+    That is numerically identical for bodies that only issue collectives
+    over their manual axes (all in-repo bodies) — it just forgoes
+    model-axis auto-partitioning inside the body on old jax. ``check_vma``
+    maps to ``check_rep``. The wrapped body pushes every mesh axis onto
+    the manual thread-local so ``constrain`` (a no-op for manual axes) and
+    the MoE dispatch's axis probe see them during tracing."""
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    mesh = _unwrap(mesh) if mesh is not None else _unwrap(current_mesh())
+    if mesh is None:
+        raise ValueError("shard_map: no mesh passed and no ambient mesh set")
+    all_axes = set(mesh.axis_names)
+    del axis_names, auto  # legacy lowering is full-manual, see docstring
+    if check_vma is None:
+        check_vma = True if check_rep is None else check_rep
+
+    @wraps(f)
+    def body(*args, **kwargs):
+        stack = _manual_stack()
+        stack.append(frozenset(all_axes))
+        try:
+            return f(*args, **kwargs)
+        finally:
+            stack.pop()
+
+    return _legacy_shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=bool(check_vma))
+
+
+def install():
+    """Fill missing modern names on the ``jax`` namespace (idempotent)."""
+    global LEGACY_SHARD_MAP
+    if not hasattr(jax, "shard_map"):
+        LEGACY_SHARD_MAP = True
+        jax.shard_map = shard_map
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = get_abstract_mesh

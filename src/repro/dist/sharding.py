@@ -1,0 +1,154 @@
+"""Mesh-aware sharding: soft constraints + spec/pytree inference.
+
+Three entry points, consumed across core, models, and launch:
+
+- ``constrain(x, axes)`` — ``with_sharding_constraint`` that degrades to a
+  no-op when there is no ambient mesh, an axis is absent/manual, or a dim
+  isn't divisible. Model code calls it unconditionally; the same forward
+  runs unsharded on one CPU device and sharded on the production mesh.
+- ``best_spec(shape, hints, mesh)`` — per-dim axis choice from priority
+  hint lists like ``["data", None]``, preferring the largest divisible
+  option and falling back to replication.
+- ``infer_param_sharding(tree, mesh)`` — pytree-wide ``NamedSharding``
+  inference for params / optimizer state: the largest model-divisible dim
+  of each leaf is sharded over ``model``; worker axes (pod, data) stay
+  replicated because every FL worker holds the full model (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import compat
+
+
+def _ambient():
+    """(concrete mesh or None, frozenset of manual axis names)."""
+    view = jax.sharding.get_abstract_mesh()
+    if view is None or getattr(view, "empty", True):
+        return None, frozenset()
+    manual = frozenset(a for a, t in zip(view.axis_names, view.axis_types)
+                       if "Manual" in str(t))
+    return compat._unwrap(view), manual
+
+
+def _axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def constrain(x, axes):
+    """Constrain ``x`` to ``axes`` (one entry per dim: axis name, tuple of
+    names, or None) on the ambient mesh; no-op when that is impossible.
+
+    Skipped per-name: names not in the mesh, names already manual (an
+    enclosing ``shard_map`` owns them), names already used on an earlier
+    dim, and names whose size doesn't divide the dim."""
+    shape = getattr(x, "shape", None)
+    if shape is None:
+        return x
+    mesh, manual = _ambient()
+    if mesh is None:
+        return x
+    if manual and compat.LEGACY_SHARD_MAP:
+        # 0.4.x SPMD partitioner aborts on constraints inside a
+        # partial-manual shard_map body; drop the hint there.
+        return x
+    sizes = _axis_sizes(mesh)
+    axes = tuple(axes)[:len(shape)]
+    axes = axes + (None,) * (len(shape) - len(axes))
+    used = set()
+    parts = []
+    for dim, hint in zip(shape, axes):
+        cand = tuple(hint) if isinstance(hint, (tuple, list)) else (hint,)
+        keep = []
+        stride = 1
+        for name in cand:
+            if (name and name in sizes and name not in manual
+                    and name not in used and dim % (stride * sizes[name]) == 0):
+                keep.append(name)
+                stride *= sizes[name]
+        used.update(keep)
+        parts.append(tuple(keep) if len(keep) > 1
+                     else (keep[0] if keep else None))
+    if all(p is None for p in parts):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*parts)))
+    except Exception:
+        # e.g. a constraint the current shard_map/jit context can't express;
+        # a sharding hint must never turn into a hard failure.
+        return x
+
+
+def best_spec(shape: Sequence[int], hints, mesh) -> P:
+    """Pick a PartitionSpec for ``shape`` from per-dim hint candidates.
+
+    ``hints[i]`` is an axis name, None, or a priority list of candidates.
+    For each dim the first candidate that exists in the mesh, is unused,
+    and divides the dim wins; the ``data`` hint is widened to the full
+    worker-axis product ``("pod", "data")`` on 3-axis meshes when that
+    larger factor still divides (global batch is sharded over ALL workers,
+    DESIGN.md §3). No candidate fits -> the dim is replicated."""
+    mesh = compat._unwrap(mesh)
+    sizes = _axis_sizes(mesh)
+    used = set()
+    parts = []
+    for i, dim in enumerate(shape):
+        hint = hints[i] if i < len(hints) else None
+        cands = list(hint) if isinstance(hint, (list, tuple)) else [hint]
+        chosen = None
+        for cand in cands:
+            if cand is None:
+                break
+            options = [(cand,)]
+            if cand == "data" and "pod" in sizes:
+                options.insert(0, ("pod", "data"))
+            for opt in options:
+                if any(a not in sizes or a in used for a in opt):
+                    continue
+                total = 1
+                for a in opt:
+                    total *= sizes[a]
+                if dim % total == 0:
+                    chosen = opt
+                    break
+            if chosen:
+                break
+        if chosen:
+            used.update(chosen)
+            parts.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def infer_param_sharding(tree, mesh, *, model_axis: str = "model"):
+    """NamedSharding pytree for params / optimizer state.
+
+    Rule: shard each leaf's largest ``model``-divisible dim over the model
+    axis (ties -> the trailing dim, the contraction/output dim of weight
+    matrices); everything else — scalars, odd-shaped leaves, meshes with
+    no model parallelism — replicates. Worker axes are never used: each
+    data shard is an FL worker holding the full (model-sharded) network."""
+    mesh = compat._unwrap(mesh)
+    msize = _axis_sizes(mesh).get(model_axis, 1)
+
+    def spec_of(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if msize <= 1 or not shape:
+            return P()
+        best = None
+        for i, d in enumerate(shape):
+            if d > 1 and d % msize == 0 and (best is None or d >= shape[best]):
+                best = i
+        if best is None:
+            return P()
+        parts = [None] * len(shape)
+        parts[best] = model_axis
+        return P(*parts)
+
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, spec_of(leaf)), tree)

@@ -224,6 +224,10 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # older jax returns one dict per program; normalise to a flat dict
+    if cost and not isinstance(cost, dict):
+        cost = cost[0]
+    cost = cost or {}
     hlo = compiled.as_text()
     coll = parse_collective_bytes(hlo)
     n_dev = 512 if multi_pod else 256

@@ -16,8 +16,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig, TrainConfig
-from repro.core import channel as chan
-from repro.core.obcsaa import OBCSAAConfig, compress_chunks, reconstruct_chunks
+from repro.core.obcsaa import (OBCSAAConfig, shardmap_compress,
+                               shardmap_reconstruct)
+from repro.dist import collectives as coll
 from repro.dist.sharding import best_spec, constrain, infer_param_sharding
 from repro.launch.mesh import num_workers, worker_axes
 from repro.models.registry import Model
@@ -79,16 +80,11 @@ def _aggregate_leaf(ob: OBCSAAConfig, leaf, waxes, phi, *, k_weight, beta_i,
         flat = jnp.concatenate([flat, jnp.zeros((rem,), flat.dtype)])
     chunks = flat.reshape(-1, ob.chunk)
     chunks = constrain(chunks, ("model", None))
-    signs, mags = compress_chunks(ob, chunks, phi)
-    w = (k_weight * beta_i * b_t).astype(wire_dtype)
-    y = jax.lax.psum(signs.astype(wire_dtype) * w, waxes)  # over-the-air sum
-    y = y.astype(jnp.float32)
-    ksum = jax.lax.psum(k_weight * beta_i, waxes)
-    noise = chan.draw_noise(noise_key, y.shape, ob.noise_var)
-    y = (y + noise) / jnp.maximum(ksum * b_t, 1e-12)   # eq. (13)
-    mbar = (jax.lax.psum(mags * (k_weight * beta_i).astype(mags.dtype), waxes)
-            / jnp.maximum(ksum, 1e-12)) if ob.magnitude_tracking else None
-    ghat = reconstruct_chunks(ob, y, mbar, phi)
+    y, ksum, mag_sum = shardmap_compress(ob, chunks, waxes, k_weight=k_weight,
+                                         beta_i=beta_i, b_t=b_t, phi=phi,
+                                         wire_dtype=wire_dtype)
+    ghat = shardmap_reconstruct(ob, y, ksum, mag_sum, b_t=b_t,
+                                noise_key=noise_key, phi=phi)
     out = ghat[:D].reshape(leaf_t.shape).astype(leaf.dtype)
     if inv_perm is not None:
         out = out.transpose(inv_perm)
@@ -158,7 +154,7 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh) -> Callable:
                                      beta_i=beta_i, b_t=b_t,
                                      noise_key=noise_key,
                                      wire_dtype=wire_dtype, specs=grad_specs)
-        loss = jax.lax.pmean(loss, waxes)
+        loss = coll.pmean(loss, waxes)
         return loss, ghat
 
     def step(params, opt_state, batch, round_ctx):

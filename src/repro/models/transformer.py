@@ -97,7 +97,7 @@ def init_lm(key, cfg: ModelConfig):
     if cfg.family == "hybrid":
         params["shared_block"] = _init_shared_attn_block(ks[3], cfg, dtype)
     if cfg.family == "vlm":
-        # stub projector bias marker (frontend itself is external, DESIGN §4)
+        # stub projector bias marker (frontend itself is external, DESIGN §8)
         params["img_pos"] = (0.02 * jax.random.normal(
             ks[3], (cfg.num_image_tokens, cfg.d_model))).astype(dtype)
     return params

@@ -1,0 +1,70 @@
+"""Deterministic stand-in for the slice of the hypothesis API used by
+test_property.py, so property tests still execute in containers where
+hypothesis isn't installed (this repo can't add dependencies). Real
+hypothesis is preferred whenever importable — see the guarded import in
+test_property.py.
+
+Each ``@given`` test runs ``max_examples`` times with arguments drawn from
+a PRNG seeded by (test name, example index): deterministic across runs and
+interpreters, no shrinking, failures report the falsifying example.
+"""
+from __future__ import annotations
+
+
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._sample(rng)))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+class settings:
+    _profiles: dict = {}
+    _current: dict = {"max_examples": 25}
+
+    def __init__(self, **kwargs):
+        self.kwargs = kwargs
+
+    @classmethod
+    def register_profile(cls, name, max_examples=25, **_ignored):
+        cls._profiles[name] = {"max_examples": max_examples}
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = dict(cls._profiles.get(name, cls._current))
+
+
+def given(*strats):
+    def deco(f):
+        def wrapper():
+            n = settings._current["max_examples"]
+            base = zlib.crc32(f.__name__.encode())
+            for i in range(n):
+                rng = random.Random(base * 1_000_003 + i)
+                args = [s._sample(rng) for s in strats]
+                try:
+                    f(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (run {i}): {args!r}") from e
+        # no functools.wraps: __wrapped__ would make pytest introspect the
+        # original signature and demand fixtures for the drawn arguments
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+    return deco
