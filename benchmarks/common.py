@@ -73,15 +73,26 @@ CACHE_PATH = Path(__file__).resolve().parents[1] / "experiments" / \
     "bench_cache.json"
 
 
+def cached_rows(key: str):
+    """Rows cached under ``key`` in experiments/bench_cache.json, or None.
+    The single owner of the cache-file schema (a name/us/derived row list
+    per suite key)."""
+    if CACHE_PATH.exists():
+        cache = json.loads(CACHE_PATH.read_text())
+        if key in cache:
+            return [tuple(r) for r in cache[key]]
+    return None
+
+
 def cached_suite(key: str, fn):
     """Run fn() -> rows once; replay from experiments/bench_cache.json."""
+    rows = cached_rows(key)
+    if rows is not None:
+        emit(rows)
+        return rows
     cache = {}
     if CACHE_PATH.exists():
         cache = json.loads(CACHE_PATH.read_text())
-    if key in cache:
-        rows = [tuple(r) for r in cache[key]]
-        emit(rows)
-        return rows
     rows = fn()
     cache[key] = [list(r) for r in rows]
     CACHE_PATH.parent.mkdir(parents=True, exist_ok=True)

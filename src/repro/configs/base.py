@@ -211,6 +211,14 @@ class TrainConfig:
     cs_measure: int = 1024          # S_c  (compressed rows per chunk)
     cs_topk: int = 409              # kappa_c per chunk (~10%)
     biht_iters: int = 5
+    # 1-bit CS decoder (repro.decode registry, DESIGN.md §9):
+    # iht | niht | biht | iht_warm | iht_fused
+    cs_decoder: str = "biht"
+    # Decoder step size. biht uses tau/S (paper §V; 1.0 is the paper
+    # setting). The fixed-step iht family needs tau below the restricted
+    # operator norm — ~0.25 at the default decode budget kappa_bar = S_c/2
+    # (see benchmarks/decoders_bench.py); niht adapts and ignores this.
+    cs_tau: float = 1.0
     noise_var: float = 1e-4         # sigma^2 (mW)
     p_max: float = 10.0             # P^Max (mW)
     # §Perf knobs (beyond-paper; False/f32 = paper-faithful baseline)

@@ -29,6 +29,7 @@ def draw_channels(key, n_workers: int, clamp: bool = True) -> jnp.ndarray:
 
 
 def draw_noise(key, shape, noise_var: float) -> jnp.ndarray:
+    """AWGN z_t ~ N(0, σ²I) added at the PS receiver (eq. 12)."""
     return jax.random.normal(key, shape) * jnp.sqrt(
         jnp.asarray(noise_var, jnp.float32))
 

@@ -50,5 +50,6 @@ def reconstruction_constant(delta: float) -> float:
 
 
 def project_chunked(phi: jnp.ndarray, g_chunks: jnp.ndarray):
-    """Block-diagonal projection: g_chunks (n, D_c) -> (n, S_c)."""
+    """Block-diagonal Φ-projection, the linear half of C(g) (eq. 7):
+    g_chunks (n, D_c) -> (n, S_c). See DESIGN.md §4."""
     return jnp.einsum("sd,nd->ns", phi, g_chunks)

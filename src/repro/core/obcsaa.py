@@ -2,7 +2,8 @@
 
 End-to-end aggregator:  per worker  C(g) = sign(Φ · sparse_κ(g))  (eq. 7),
 power-controlled superposition over the MAC (eq. 8-12), post-processing
-(eq. 13), 1-bit CS reconstruction (eq. 43), model update (eq. 14).
+(eq. 13), 1-bit CS decode via the ``repro.decode`` registry (eq. 43,
+selected by ``OBCSAAConfig.decoder``; DESIGN.md §9), model update (eq. 14).
 
 Two execution modes share the same compression core:
 
@@ -19,7 +20,6 @@ the paper's D=50,890 MLP one chunk of D_c=D reproduces the paper exactly.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -28,11 +28,10 @@ import jax.numpy as jnp
 from repro.core import channel as chan
 from repro.core.measurement import make_phi
 from repro.core.quantize import sign_pm1
-from repro.core.reconstruction import reconstruct
-from repro.core.sparsify import (pad_to_chunks, topk_sparsify,
-                                 topk_sparsify_bisect)
+from repro.core.sparsify import topk_sparsify, topk_sparsify_bisect
+from repro.decode import DecodeConfig
+from repro.decode import decode as cs_decode
 from repro.dist import collectives as coll
-from repro.dist.sharding import constrain
 
 
 @dataclass(frozen=True)
@@ -46,6 +45,12 @@ class OBCSAAConfig:
     biht_iters: int = 30
     recon_alg: str = "biht"      # BIHT (paper §V); "iht" also available
     recon_tau: float = 1.0
+    # Decoder registry selection (repro.decode, DESIGN.md §9). "" keeps the
+    # legacy recon_alg choice; any registered name overrides it.
+    decoder: str = ""
+    # Warm-start decode: the FL loop seeds round t's decode with round t−1's
+    # raw estimate (temporal gradient correlation; reset on schedule change).
+    warm_start: bool = False
     noise_var: float = 1e-4      # σ² (mW)
     p_max: float = 10.0          # P^Max (mW)
     phi_seed: int = 42
@@ -64,12 +69,32 @@ class OBCSAAConfig:
     def decode_k(self) -> int:
         return self.recon_topk or min(4 * self.topk, self.measure // 2)
 
+    def decode_cfg(self) -> DecodeConfig:
+        """Map the aggregation knobs onto a registry DecodeConfig. The
+        warm-start selection swaps ``iht`` for its warm-capable alias so
+        carried state is actually consumed, and REJECTS decoders that
+        would silently drop it (DESIGN.md §9)."""
+        alg = self.decoder or self.recon_alg
+        if self.warm_start:
+            if alg == "iht":
+                alg = "iht_warm"
+            from repro.decode import get_decoder
+            if not get_decoder(alg).warm:
+                raise ValueError(
+                    f"warm_start=True but decoder {alg!r} is not "
+                    "warm-capable (state would be silently dropped); use "
+                    "iht, iht_warm or iht_fused")
+        return DecodeConfig(algorithm=alg, iters=self.biht_iters,
+                            tau=self.recon_tau, use_kernels=self.use_kernels,
+                            ht="bisect" if self.spmd_topk else "sort")
+
 
 # --- compression core (per worker) ---------------------------------------------
 
 def compress_chunks(cfg: OBCSAAConfig, flat: jnp.ndarray, phi=None):
-    """flat: (D_pad,) with D_pad % chunk == 0, or pre-chunked (n, chunk).
+    """Per-worker compression C(g) = sign(Φ sparse_κ(g)) (eq. 6-7), chunked.
 
+    flat: (D_pad,) with D_pad % chunk == 0, or pre-chunked (n, chunk).
     Returns (signs (n_chunks, S_c), mags (n_chunks,))."""
     phi = cfg.phi(flat.dtype) if phi is None else phi
     gc = flat if flat.ndim == 2 else flat.reshape(-1, cfg.chunk)
@@ -86,36 +111,39 @@ def compress_chunks(cfg: OBCSAAConfig, flat: jnp.ndarray, phi=None):
 
 
 def reconstruct_chunks(cfg: OBCSAAConfig, y: jnp.ndarray,
-                       mags: Optional[jnp.ndarray] = None, phi=None):
-    """y: (n_chunks, S_c) post-processed aggregate. Returns flat (D_pad,)."""
+                       mags: Optional[jnp.ndarray] = None, phi=None,
+                       x0: Optional[jnp.ndarray] = None,
+                       return_raw: bool = False):
+    """y: (n_chunks, S_c) post-processed aggregate (eq. 13). Decodes via the
+    registry (eq. 43; repro.decode) and returns flat (D_pad,).
+
+    ``x0``: warm-start chunks (n_chunks, D_c) from the previous round's RAW
+    estimate. ``return_raw=True`` additionally returns that raw (pre-
+    magnitude-scaling) estimate so the caller can carry it as next round's
+    ``x0`` — warm state must live in decoder space, not gradient space."""
     phi = cfg.phi(y.dtype) if phi is None else phi
-    y = constrain(y, ("model", None))
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-        xhat = kops.biht(y, phi, cfg.decode_k, cfg.biht_iters, cfg.recon_tau)
-    else:
-        ht_fn = None
-        if cfg.spmd_topk:
-            def ht_fn(x, k):
-                return topk_sparsify_bisect(x, k)[0]
-        xhat = reconstruct(y, phi, cfg.decode_k, algorithm=cfg.recon_alg,
-                           iters=cfg.biht_iters, tau=cfg.recon_tau,
-                           ht_fn=ht_fn)
+    xhat = cs_decode(y, phi, cfg.decode_k, cfg.decode_cfg(), x0=x0)
+    raw = xhat
     if cfg.magnitude_tracking and mags is not None:
         norm = jnp.linalg.norm(xhat, axis=-1, keepdims=True)
         xhat = xhat * (mags[:, None] / jnp.maximum(norm, 1e-12))
-    return xhat.reshape(-1)
+    flat = xhat.reshape(-1)
+    return (flat, raw) if return_raw else flat
 
 
 # --- simulation mode (paper §V) --------------------------------------------------
 
 def simulate_round(cfg: OBCSAAConfig, grads_flat: jnp.ndarray,
                    k_weights: jnp.ndarray, beta: jnp.ndarray, b_t,
-                   h: jnp.ndarray, key) -> Tuple[jnp.ndarray, dict]:
+                   h: jnp.ndarray, key,
+                   decode_x0=None) -> Tuple[jnp.ndarray, dict]:
     """grads_flat: (U, D). Returns (g_hat (D,), diagnostics).
 
     Implements eq. (6)-(14) with perfect channel inversion: the received
-    aggregate is Σ_i K_i b_t β_i C(g_i) + z (eq. 12)."""
+    aggregate is Σ_i K_i b_t β_i C(g_i) + z (eq. 12). ``decode_x0`` warm-
+    starts the decoder (eq. 43) with the previous round's raw estimate;
+    ``diag["decode_xhat"]`` carries this round's raw estimate back out so
+    the FL loop can thread the state (DESIGN.md §9)."""
     U, D = grads_flat.shape
     pad = (-D) % cfg.chunk
     gpad = jnp.pad(grads_flat, ((0, 0), (0, pad)))
@@ -129,11 +157,12 @@ def simulate_round(cfg: OBCSAAConfig, grads_flat: jnp.ndarray,
     y = y / denom                                   # eq. (13)
     mbar = jnp.einsum("u,uc->c", (k_weights * beta).astype(mags.dtype),
                       mags) / jnp.maximum(jnp.sum(k_weights * beta), 1e-12)
-    ghat = reconstruct_chunks(cfg, y, mbar if cfg.magnitude_tracking else None,
-                              phi)[:D]
+    ghat, xraw = reconstruct_chunks(
+        cfg, y, mbar if cfg.magnitude_tracking else None, phi,
+        x0=decode_x0, return_raw=True)
     diag = {"denom": denom, "mbar_mean": jnp.mean(mbar),
-            "y_rms": jnp.sqrt(jnp.mean(y ** 2))}
-    return ghat, diag
+            "y_rms": jnp.sqrt(jnp.mean(y ** 2)), "decode_xhat": xraw}
+    return ghat[:D], diag
 
 
 # --- distributed mode (inside shard_map over worker axes) -------------------------
@@ -165,18 +194,20 @@ def shardmap_compress(cfg: OBCSAAConfig, local_flat: jnp.ndarray,
 
 
 def shardmap_reconstruct(cfg: OBCSAAConfig, y: jnp.ndarray, ksum,
-                         mag_sum=None, *, b_t, noise_key,
-                         phi=None) -> jnp.ndarray:
-    """PS-side half: AWGN + post-processing (eq. 13) + 1-bit CS decode.
+                         mag_sum=None, *, b_t, noise_key, phi=None,
+                         decode_x0=None) -> jnp.ndarray:
+    """PS-side half: AWGN + post-processing (eq. 13) + 1-bit CS decode
+    (eq. 43, registry-selected via ``cfg.decoder``).
 
     Noise is added once at the PS — every shard folds the same key, so the
-    (replicated) draw is identical and the result stays replicated."""
+    (replicated) draw is identical and the result stays replicated.
+    ``decode_x0`` warm-starts the decoder when the caller carries state."""
     denom = jnp.maximum(ksum * b_t, 1e-12)
     noise = chan.draw_noise(noise_key, y.shape, cfg.noise_var)
     y = (y.astype(jnp.float32) + noise) / denom         # eq. (13)
     mbar = (mag_sum / jnp.maximum(ksum, 1e-12)
             if (cfg.magnitude_tracking and mag_sum is not None) else None)
-    return reconstruct_chunks(cfg, y, mbar, phi)
+    return reconstruct_chunks(cfg, y, mbar, phi, x0=decode_x0)
 
 
 def shardmap_aggregate(cfg: OBCSAAConfig, local_flat: jnp.ndarray,

@@ -28,5 +28,6 @@ def pack_bits(signs: jnp.ndarray) -> jnp.ndarray:
 
 
 def unpack_bits(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of ``pack_bits``: uint8 bitmaps back to ±1 symbols (eq. 7)."""
     bits = (packed[:, None] >> jnp.arange(8, dtype=jnp.uint8)[None]) & 1
     return (bits.astype(jnp.float32) * 2.0 - 1.0).reshape(-1)[:n]

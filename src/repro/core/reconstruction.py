@@ -1,78 +1,24 @@
-"""1-bit CS reconstruction at the PS (paper §II-B.5, eq. 43).
-
-The PS solves  min ||x||_1  s.t. ||ŷ − Φx||² ≤ ε  (eq. 43). We implement the
-iterative-hard-thresholding family the paper selects (BIHT, Jacques et al.):
-
-- ``iht``: x ← η_κ(x + τ Φᵀ(ŷ − Φx)) on the REAL post-processed aggregate ŷ
-  (the paper's analysis, eq. 42-44, treats the 1-bit error as bounded noise on
-  real measurements — this is the decoder used in the FL loop).
-- ``biht_sign``: the classic single-worker BIHT with sign-consistency
-  updates x ← η_κ(x + (τ/S) Φᵀ(y_sign − sign(Φx))), unit-normalized.
-
-Magnitude note: sign measurements are scale-invariant, so the decoder
-recovers direction; the aggregator transmits one extra analog scalar per
-worker (the sparsified-gradient norm) to restore scale — standard "norm
-estimation" in the 1-bit CS literature, recorded in DESIGN.md.
+"""DEPRECATED — the 1-bit CS decoders moved to ``repro.decode`` (DESIGN.md
+§9). This shim keeps old imports working with a warning; new code should
+call ``repro.decode.decode`` (registry dispatch) or import the decoder
+functions from ``repro.decode`` directly.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.decode.iht import (biht_sign, hard_threshold,  # noqa: F401
+                              iht, niht)
 
-from repro.core.quantize import sign_pm1
-
-
-def hard_threshold(x: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Keep the k largest-|.| entries along the last axis."""
-    absx = jnp.abs(x)
-    kth = jax.lax.top_k(absx, k)[0][..., -1:]
-    mask = absx >= kth
-    over = jnp.cumsum(mask, axis=-1) <= k
-    return x * (mask & over)
+warnings.warn(
+    "repro.core.reconstruction has moved to repro.decode; this compat shim "
+    "will be removed in a future PR (DESIGN.md §9).",
+    DeprecationWarning, stacklevel=2)
 
 
-def iht(y: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int = 10,
-        tau: float = 1.0, ht_fn=None) -> jnp.ndarray:
-    """IHT on real measurements. y: (..., S); phi: (S, D). Returns (..., D).
-
-    tau is scaled by 1/||Φ||² proxy = 1 (Φ has unit spectral norm in
-    expectation under the 1/S normalization)."""
-    ht = ht_fn or hard_threshold
-
-    def step(x, _):
-        resid = y - jnp.einsum("sd,...d->...s", phi, x)
-        x = x + tau * jnp.einsum("sd,...s->...d", phi, resid)
-        return ht(x, k), None
-
-    x0 = jnp.zeros(y.shape[:-1] + (phi.shape[1],), y.dtype)
-    x, _ = jax.lax.scan(step, x0, None, length=iters)
-    return x
-
-
-def biht_sign(y_sign: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int = 30,
-              tau: float = 1.0, ht_fn=None) -> jnp.ndarray:
-    """Classic BIHT (sign-consistency subgradient), unit-norm output."""
-    S = phi.shape[0]
-    ht = ht_fn or hard_threshold
-
-    def step(x, _):
-        resid = y_sign - sign_pm1(jnp.einsum("sd,...d->...s", phi, x))
-        x = x + (tau / S) * jnp.einsum("sd,...s->...d", phi, resid)
-        x = ht(x, k)
-        return x, None
-
-    x0 = jnp.einsum("sd,...s->...d", phi, y_sign) / S
-    x0 = ht(x0, k)
-    x, _ = jax.lax.scan(step, x0, None, length=iters)
-    norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
-    return x / jnp.maximum(norm, 1e-12)
-
-
-def reconstruct(y: jnp.ndarray, phi: jnp.ndarray, k: int, *,
-                algorithm: str = "iht", iters: int = 10,
-                tau: float = 1.0, ht_fn=None) -> jnp.ndarray:
+def reconstruct(y, phi, k, *, algorithm: str = "iht", iters: int = 10,
+                tau: float = 1.0, ht_fn=None):
+    """Deprecated alias for ``repro.decode.decode``; prefer the registry."""
     if algorithm == "iht":
         return iht(y, phi, k, iters, tau, ht_fn=ht_fn)
     if algorithm == "biht":

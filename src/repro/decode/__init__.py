@@ -1,0 +1,24 @@
+"""repro.decode — pluggable 1-bit CS decoder subsystem (eq. 43).
+
+The PS-side reconstruction hot path, as a registry of interchangeable
+decoders behind one entry point (``decode``), with the IHT inner iteration
+fused through the Pallas kernels (``repro.kernels``) and chunk-sharded on
+the mesh (``repro.dist``). See DESIGN.md §9.
+
+Layering: this package imports ``repro.kernels`` and ``repro.dist`` only;
+``repro.core`` consumes it (never the reverse at module scope), so the
+decoders are usable standalone — benchmarks and tests drive them without
+an aggregation config.
+"""
+from repro.decode.fused import fused_iht
+from repro.decode.iht import (biht_sign, hard_threshold,
+                              hard_threshold_bisect, iht, niht)
+from repro.decode.registry import (DecodeConfig, Decoder, decode,
+                                   get_decoder, list_decoders,
+                                   register_decoder)
+
+__all__ = [
+    "DecodeConfig", "Decoder", "biht_sign", "decode", "fused_iht",
+    "get_decoder", "hard_threshold", "hard_threshold_bisect", "iht",
+    "list_decoders", "niht", "register_decoder",
+]

@@ -1,0 +1,81 @@
+"""Fused-Pallas IHT hot loop (eq. 43) — the PS-side decode at kernel speed.
+
+Each IHT iteration is three kernel launches with no HBM round-trip of the
+dense intermediates (DESIGN.md §9 fusion boundary):
+
+  1. ``cs_project(mode="residual")``   r = ŷ − x Φᵀ   (projection + residual
+     fused in the matmul epilogue — the (n, S) projection never leaves VMEM)
+  2. ``backproject``                   x' = x + τ r Φ  (update fused in the
+     matmul epilogue — x read once, written once)
+  3. ``topk_select``                   x = η_κ(x')     (sort-free bisection
+     threshold, vector-unit only)
+
+Tiling policy: on TPU the kernels use their MXU/VMEM module tiles and lower
+through Mosaic; on CPU (``interpret=True``) full-extent contraction tiles
+are passed instead, so each kernel performs ONE ``dot_general`` identical
+to the einsum reference — the fused loop then matches ``repro.decode.iht``
+bit for bit (tests/test_decode.py) while staying no slower than the einsum
+path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import backproject as _bp
+from repro.kernels import cs_project as _cs
+from repro.kernels import topk_select as _tk
+from repro.kernels.ops import _interpret
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _pad_rows(x, n_pad):
+    if x.shape[0] == n_pad:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((n_pad - x.shape[0],) + x.shape[1:], x.dtype)])
+
+
+def fused_iht(y: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int = 10,
+              tau: float = 1.0, x0=None, interpret=None) -> jnp.ndarray:
+    """IHT with the inner iteration fused through the Pallas kernels.
+
+    y: (n, S) post-processed aggregate (eq. 13); phi: (S, D); returns
+    (n, D). Semantics are identical to ``repro.decode.iht.iht`` with the
+    bisection hard threshold; ``x0`` warm-starts the iterate."""
+    interpret = _interpret() if interpret is None else interpret
+    n, s = y.shape
+    d = phi.shape[1]
+    if interpret:
+        # full-extent tiles: one dot per kernel, bit-parity with einsum
+        bn = _round_up(n, 8)
+        proj_tiles, bp_tiles, tk_bn = (bn, s, d), (bn, d, s), bn
+    else:
+        # module-default tiles: each kernel picks min(its BN, bn), so the
+        # padded row count must divide by whatever they pick — any multiple
+        # of 8 works below the smallest BN, otherwise pad to the largest BN
+        max_bn = max(_cs.BN, _bp.BN, _tk.BN)
+        bn = _round_up(n, 8)
+        if bn > min(_cs.BN, _bp.BN, _tk.BN):
+            bn = _round_up(n, max_bn)
+        proj_tiles = bp_tiles = None
+        tk_bn = None
+    yp = _pad_rows(y, bn)
+    if x0 is None:
+        xp = jnp.zeros((bn, d), y.dtype)
+    else:
+        xp = _pad_rows(x0.astype(y.dtype), bn)
+
+    def step(x, _):
+        resid = _cs.project(phi, x, mode="residual", y=yp,
+                            interpret=interpret, tiles=proj_tiles)
+        x = _bp.backproject(x, resid, phi, tau, interpret=interpret,
+                            tiles=bp_tiles)
+        x, _ = _tk.topk_select(x, k, interpret=interpret, bn=tk_bn)
+        return x, None
+
+    x, _ = jax.lax.scan(step, xp, None, length=iters)
+    return x[:n]

@@ -1,0 +1,123 @@
+"""1-bit CS decoder family — einsum reference implementations (eq. 43).
+
+The PS solves  min ||x||_1  s.t. ||ŷ − Φx||² ≤ ε  (eq. 43). This module is
+the iterative-hard-thresholding family the paper selects (BIHT, Jacques et
+al.), plus the adaptive-step and warm-start variants the registry exposes
+(DESIGN.md §9):
+
+- ``iht``: x ← η_κ(x + τ Φᵀ(ŷ − Φx)) on the REAL post-processed aggregate ŷ
+  (the paper's analysis, eq. 42-44, treats the 1-bit error as bounded noise
+  on real measurements).
+- ``niht``: normalized IHT (Blumensath & Davies 2010) — the step size is
+  recomputed every iteration as μ = ||g||²/||Φg||² with g the gradient
+  restricted to the current support, removing the fixed-τ tuning knob.
+- ``biht_sign``: the classic single-worker BIHT with sign-consistency
+  updates x ← η_κ(x + (τ/S) Φᵀ(y_sign − sign(Φx))), unit-normalized.
+
+All decoders accept ``x0``, the warm-start iterate: round *t* of the FL
+loop can seed the decode with round *t−1*'s estimate, exploiting temporal
+gradient correlation (DESIGN.md §9; state handling lives in
+``repro.fl.rounds``). ``x0=None`` is the cold start from zeros (``iht``)
+or from the thresholded back-projection (``biht_sign``).
+
+Magnitude note: sign measurements are scale-invariant, so the decoders
+recover direction; the aggregator transmits one extra analog scalar per
+worker (the sparsified-gradient norm) to restore scale — standard "norm
+estimation" in the 1-bit CS literature, recorded in DESIGN.md §4.
+
+These are the allclose/bitwise oracles for the fused-Pallas hot loop in
+``repro.decode.fused``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import sign_pm1
+
+
+def hard_threshold(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """η_κ: keep the k largest-|.| entries along the last axis (eq. 6)."""
+    absx = jnp.abs(x)
+    kth = jax.lax.top_k(absx, k)[0][..., -1:]
+    mask = absx >= kth
+    over = jnp.cumsum(mask, axis=-1) <= k
+    return x * (mask & over)
+
+
+def hard_threshold_bisect(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """η_κ via magnitude-threshold bisection — the SPMD-partitionable
+    variant (``jax.lax.top_k`` lowers to a sort GSPMD cannot shard)."""
+    from repro.core.sparsify import topk_sparsify_bisect  # lazy: decode
+    # never imports repro.core at module scope (core imports decode)
+    return topk_sparsify_bisect(x, k)[0]
+
+
+def iht(y: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int = 10,
+        tau: float = 1.0, ht_fn=None, x0=None) -> jnp.ndarray:
+    """Fixed-step IHT on real measurements (eq. 43). y: (..., S);
+    phi: (S, D). Returns (..., D).
+
+    tau is scaled by 1/||Φ||² proxy = 1 (Φ has unit spectral norm in
+    expectation under the 1/S normalization). ``x0`` warm-starts the
+    iterate (defaults to zeros — the cold start)."""
+    ht = ht_fn or hard_threshold
+
+    def step(x, _):
+        resid = y - jnp.einsum("sd,...d->...s", phi, x)
+        x = x + tau * jnp.einsum("sd,...s->...d", phi, resid)
+        return ht(x, k), None
+
+    if x0 is None:
+        x0 = jnp.zeros(y.shape[:-1] + (phi.shape[1],), y.dtype)
+    x, _ = jax.lax.scan(step, x0, None, length=iters)
+    return x
+
+
+def niht(y: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int = 10,
+         ht_fn=None, x0=None) -> jnp.ndarray:
+    """Normalized IHT (eq. 43 with an adaptive step).
+
+    Per iteration the step μ = ||g_Λ||²/||Φ g_Λ||² is exact line search
+    along the support-restricted gradient g_Λ (Λ = supp(x); the full
+    gradient when the support is empty, i.e. the cold first step). Costs
+    one extra projection per iteration over ``iht`` but needs no τ."""
+    ht = ht_fn or hard_threshold
+
+    def step(x, _):
+        resid = y - jnp.einsum("sd,...d->...s", phi, x)
+        g = jnp.einsum("sd,...s->...d", phi, resid)
+        on_support = jnp.any(x != 0, axis=-1, keepdims=True)
+        gs = jnp.where(on_support, g * (x != 0), g)
+        num = jnp.sum(gs * gs, axis=-1, keepdims=True)
+        pg = jnp.einsum("sd,...d->...s", phi, gs)
+        den = jnp.sum(pg * pg, axis=-1, keepdims=True)
+        mu = num / jnp.maximum(den, 1e-30)
+        return ht(x + mu * g, k), None
+
+    if x0 is None:
+        x0 = jnp.zeros(y.shape[:-1] + (phi.shape[1],), y.dtype)
+    x, _ = jax.lax.scan(step, x0, None, length=iters)
+    return x
+
+
+def biht_sign(y_sign: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int = 30,
+              tau: float = 1.0, ht_fn=None, x0=None) -> jnp.ndarray:
+    """Classic BIHT (sign-consistency subgradient, eq. 43 on sign
+    measurements), unit-norm output. ``x0`` warm-starts the iterate
+    (default: the thresholded back-projection η_κ(Φᵀy/S))."""
+    S = phi.shape[0]
+    ht = ht_fn or hard_threshold
+
+    def step(x, _):
+        resid = y_sign - sign_pm1(jnp.einsum("sd,...d->...s", phi, x))
+        x = x + (tau / S) * jnp.einsum("sd,...s->...d", phi, resid)
+        x = ht(x, k)
+        return x, None
+
+    if x0 is None:
+        x0 = jnp.einsum("sd,...s->...d", phi, y_sign) / S
+        x0 = ht(x0, k)
+    x, _ = jax.lax.scan(step, x0, None, length=iters)
+    norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(norm, 1e-12)

@@ -1,0 +1,140 @@
+"""Pluggable 1-bit CS decoder registry — one entry point for eq. 43.
+
+Every paper figure and the production train step decode through
+``decode(y, phi, k, cfg)`` (DESIGN.md §9); the decoder is a registry
+lookup, so codec experiments (step rule, warm start, Pallas fusion) are a
+config string away in both execution modes (DESIGN.md §2).
+
+Built-in decoders:
+
+  iht        fixed-step IHT on real measurements (eq. 43); routes through
+             the fused-Pallas hot loop when ``cfg.use_kernels``
+  niht       normalized (adaptive-step) IHT — exact line search per step
+  biht       classic sign-consistency BIHT (paper §V choice)
+  iht_warm   IHT seeded with round t−1's estimate (``x0``); cold start
+             when no state is available
+  iht_fused  the fused-Pallas loop unconditionally (benchmark pinning)
+
+Warm-start protocol: ``decode`` forwards ``x0`` only to decoders
+registered with ``warm=True`` — cold decoders stay bit-stable no matter
+what state the caller carries. State itself lives with the caller
+(``repro.fl.rounds``; reset on schedule change, DESIGN.md §9).
+
+Sharding: ``y`` and the returned estimate are constrained chunk-sharded
+over the mesh (``repro.dist.sharding.constrain``) — the chunk dimension is
+embarrassingly parallel (DESIGN.md §4) and the constraint degrades to a
+no-op off-mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+from repro.dist.sharding import constrain
+from repro.decode.fused import fused_iht
+from repro.decode.iht import (biht_sign, hard_threshold,
+                              hard_threshold_bisect, iht, niht)
+
+
+@dataclass(frozen=True)
+class DecodeConfig:
+    """Decoder selection + knobs, consumed by ``decode``.
+
+    ``OBCSAAConfig.decode_cfg()`` derives one from the aggregation config;
+    benchmarks construct them directly.
+
+    ``ht`` selects the hard-threshold implementation for the EINSUM
+    decoders only: "sort" (exact ``lax.top_k``, index tie-break) or
+    "bisect" (SPMD-partitionable threshold search). Kernel paths
+    (``use_kernels``/``iht_fused``) always threshold via the bisection
+    kernel — identical selection except on exact magnitude ties, which
+    are measure-zero for float gradients (kernels/topk_select.py)."""
+    algorithm: str = "biht"
+    iters: int = 30
+    tau: float = 1.0
+    use_kernels: bool = False     # fused-Pallas hot loop where supported
+    ht: str = "sort"              # sort | bisect (SPMD-friendly threshold)
+    shard_axes: Tuple = ("model", None)   # chunk-dim mesh constraint
+
+
+@dataclass(frozen=True)
+class Decoder:
+    """Registry entry: the decode fn + whether it consumes warm state."""
+    fn: Callable
+    warm: bool = False
+
+
+_REGISTRY: Dict[str, Decoder] = {}
+
+
+def register_decoder(name: str, *, warm: bool = False):
+    """Register ``fn(y, phi, k, cfg, x0) -> xhat`` under ``name``."""
+    def deco(fn):
+        _REGISTRY[name] = Decoder(fn=fn, warm=warm)
+        return fn
+    return deco
+
+
+def get_decoder(name: str) -> Decoder:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown decoder {name!r}; registered: "
+                         f"{', '.join(list_decoders())}") from None
+
+
+def list_decoders():
+    return sorted(_REGISTRY)
+
+
+def _ht_fn(cfg: DecodeConfig):
+    if cfg.ht == "bisect":
+        return hard_threshold_bisect
+    if cfg.ht == "sort":
+        return hard_threshold
+    raise ValueError(f"unknown hard-threshold {cfg.ht!r} (sort|bisect)")
+
+
+def decode(y, phi, k: int, cfg: DecodeConfig, x0=None):
+    """Decode the post-processed aggregate ŷ (eq. 13) back to the sparse
+    gradient estimate (eq. 43). y: (n, S); phi: (S, D) -> (n, D).
+
+    ``x0`` is the warm-start iterate (round t−1's raw estimate); it is
+    forwarded only to warm-capable decoders."""
+    dec = get_decoder(cfg.algorithm)
+    y = constrain(y, cfg.shard_axes)
+    x = dec.fn(y, phi, k, cfg, x0 if dec.warm else None)
+    return constrain(x, cfg.shard_axes)
+
+
+# --- built-ins --------------------------------------------------------------------
+
+@register_decoder("iht")
+def _iht(y, phi, k, cfg, x0):
+    if cfg.use_kernels:
+        return fused_iht(y, phi, k, cfg.iters, cfg.tau, x0=x0)
+    return iht(y, phi, k, cfg.iters, cfg.tau, ht_fn=_ht_fn(cfg), x0=x0)
+
+
+@register_decoder("iht_warm", warm=True)
+def _iht_warm(y, phi, k, cfg, x0):
+    return _iht(y, phi, k, cfg, x0)
+
+
+@register_decoder("iht_fused", warm=True)
+def _iht_fused(y, phi, k, cfg, x0):
+    return fused_iht(y, phi, k, cfg.iters, cfg.tau, x0=x0)
+
+
+@register_decoder("niht")
+def _niht(y, phi, k, cfg, x0):
+    return niht(y, phi, k, cfg.iters, ht_fn=_ht_fn(cfg), x0=x0)
+
+
+@register_decoder("biht")
+def _biht(y, phi, k, cfg, x0):
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        return kops.biht(y, phi, k, cfg.iters, cfg.tau)
+    return biht_sign(y, phi, k, cfg.iters, cfg.tau, ht_fn=_ht_fn(cfg),
+                     x0=x0)

@@ -6,7 +6,9 @@ Each round t:
   3. Scheduled workers compute local full-batch gradients (eq. 3), compress
      (eq. 6-7), power-scale (eq. 10) and transmit simultaneously.
   4. The MAC superimposes; PS adds AWGN, post-processes (eq. 13), decodes
-     (eq. 43) and broadcasts ĝ_t; everyone updates w (eq. 14).
+     (eq. 43, via the repro.decode registry — warm-start state is carried
+     here across rounds, DESIGN.md §9) and broadcasts ĝ_t; everyone
+     updates w (eq. 14).
 
 Aggregators:
   perfect  — error-free weighted mean (paper's "perfect aggregation" bench)
@@ -100,6 +102,16 @@ class FederatedTrainer:
                                                   loss_fn))
         self._agg_fn = jax.jit(self._aggregate)
         U = len(self.k_weights)
+        # Warm-start decode state (DESIGN.md §9): round t's decoder is
+        # seeded with round t−1's RAW estimate; zeros = cold start. Reset
+        # whenever the schedule changes (the aggregate's support mixture
+        # shifts, so stale state would bias the decode).
+        ob = cfg.obcsaa
+        self._n_chunks = -(-self.D // ob.chunk)
+        self._decode_x0 = (jnp.zeros((self._n_chunks, ob.chunk))
+                           if (cfg.aggregator == "obcsaa" and ob.warm_start)
+                           else None)
+        self._prev_beta = None
         self._residual = jnp.zeros((U, self.D)) if cfg.error_feedback \
             else None
         if cfg.error_feedback:
@@ -119,17 +131,20 @@ class FederatedTrainer:
 
             self._ef_split = ef_split
 
-    def _aggregate(self, grads_flat, k_weights, beta, b_t, h, key):
+    def _aggregate(self, grads_flat, k_weights, beta, b_t, h, key,
+                   decode_x0=None):
         cfg = self.cfg
         if cfg.aggregator == "perfect":
-            return _perfect_aggregate(grads_flat, k_weights, beta)
+            return _perfect_aggregate(grads_flat, k_weights, beta), None
         if cfg.aggregator == "topk_aa":
             return _topk_aa_aggregate(grads_flat, k_weights, beta, b_t,
                                       cfg.topk_dense, cfg.obcsaa.noise_var,
-                                      key)
-        ghat, _ = simulate_round(cfg.obcsaa, grads_flat, k_weights, beta,
-                                 b_t, h, key)
-        return ghat
+                                      key), None
+        ghat, diag = simulate_round(cfg.obcsaa, grads_flat, k_weights, beta,
+                                    b_t, h, key, decode_x0=decode_x0)
+        # only thread the raw estimate out of the jit when warm-start state
+        # is actually carried — otherwise it is a dead D-sized output
+        return ghat, (diag["decode_xhat"] if cfg.obcsaa.warm_start else None)
 
     def run_round(self, t: int) -> Dict:
         cfg = self.cfg
@@ -144,11 +159,20 @@ class FederatedTrainer:
         grads = self._grad_fn(self.params, self.worker_data)     # (U, D)
         if self._residual is not None:
             grads, self._residual = self._ef_split(grads, self._residual)
+        if (self._decode_x0 is not None and self._prev_beta is not None
+                and not np.array_equal(beta, self._prev_beta)):
+            # schedule change -> reset warm-start state (DESIGN.md §9)
+            self._decode_x0 = jnp.zeros_like(self._decode_x0)
         key = jax.random.PRNGKey(cfg.seed * 100003 + t)
-        ghat = self._agg_fn(grads, jnp.asarray(self.k_weights, jnp.float32),
-                            jnp.asarray(beta, jnp.float32),
-                            jnp.asarray(b_t, jnp.float32),
-                            jnp.asarray(h, jnp.float32), key)
+        ghat, xraw = self._agg_fn(grads,
+                                  jnp.asarray(self.k_weights, jnp.float32),
+                                  jnp.asarray(beta, jnp.float32),
+                                  jnp.asarray(b_t, jnp.float32),
+                                  jnp.asarray(h, jnp.float32), key,
+                                  self._decode_x0)
+        if self._decode_x0 is not None:
+            self._decode_x0 = xraw
+        self._prev_beta = np.asarray(beta).copy()
         g_tree = self._unflatten(ghat[:self.D])
         self.params, self.opt_state = self.opt.update(
             g_tree, self.opt_state, self.params, cfg.learning_rate)

@@ -36,12 +36,17 @@ def _backproject_kernel(r_ref, phi_ref, x_ref, out_ref, acc_ref, *, n_bs,
 
 
 def backproject(x: jnp.ndarray, resid: jnp.ndarray, phi: jnp.ndarray,
-                tau: float, *, interpret: bool = False) -> jnp.ndarray:
-    """x: (n, D); resid: (n, S); phi: (S, D) -> x + tau * resid @ phi."""
+                tau: float, *, interpret: bool = False,
+                tiles=None) -> jnp.ndarray:
+    """x: (n, D); resid: (n, S); phi: (S, D) -> x + tau * resid @ phi.
+
+    ``tiles=(bn, bd, bs)`` overrides the default VMEM tiling (see
+    cs_project.project; the fused decode loop passes full-extent tiles in
+    interpret mode for bit-parity with the einsum reference)."""
     n, d = x.shape
     s = phi.shape[0]
     assert resid.shape == (n, s) and phi.shape == (s, d)
-    bn, bd, bs = min(BN, n), min(BD, d), min(BS, s)
+    bn, bd, bs = tiles if tiles else (min(BN, n), min(BD, d), min(BS, s))
     assert n % bn == 0 and d % bd == 0 and s % bs == 0, \
         f"shapes ({n},{s},{d}) not tileable by ({bn},{bs},{bd})"
     n_bs = s // bs

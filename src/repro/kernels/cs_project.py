@@ -7,7 +7,12 @@ never round-trips HBM — only the ±1 symbols are written out.
 Variants (shared kernel body, different epilogues):
 - ``mode="sign"``:           sign(x Φᵀ)           (eq. 7 compression)
 - ``mode="sign_residual"``:  y − sign(x Φᵀ)       (BIHT residual step)
+- ``mode="residual"``:       y − x Φᵀ             (IHT residual step, eq. 43)
 - ``mode="none"``:           x Φᵀ                 (plain projection)
+
+The residual epilogues are the decode-loop fusion boundary (DESIGN.md §9):
+the dense (n, S) projection is consumed inside the kernel and never
+round-trips HBM — only the residual leaves.
 """
 from __future__ import annotations
 
@@ -29,6 +34,8 @@ def _epilogue(acc, mode, y_blk, dtype):
     if mode == "sign_residual":
         sgn = jnp.where(acc >= 0, 1.0, -1.0)
         return (y_blk.astype(jnp.float32) - sgn).astype(dtype)
+    if mode == "residual":
+        return (y_blk.astype(jnp.float32) - acc).astype(dtype)
     return acc.astype(dtype)
 
 
@@ -48,7 +55,8 @@ def _proj_kernel(x_ref, phi_ref, out_ref, acc_ref, *, n_bd, mode):
         out_ref[...] = _epilogue(acc_ref[...], mode, None, out_ref.dtype)
 
 
-def _proj_resid_kernel(x_ref, phi_ref, y_ref, out_ref, acc_ref, *, n_bd):
+def _proj_resid_kernel(x_ref, phi_ref, y_ref, out_ref, acc_ref, *, n_bd,
+                       mode):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -61,19 +69,24 @@ def _proj_resid_kernel(x_ref, phi_ref, y_ref, out_ref, acc_ref, *, n_bd):
 
     @pl.when(k == n_bd - 1)
     def _():
-        out_ref[...] = _epilogue(acc_ref[...], "sign_residual", y_ref[...],
+        out_ref[...] = _epilogue(acc_ref[...], mode, y_ref[...],
                                  out_ref.dtype)
 
 
 def project(phi: jnp.ndarray, chunks: jnp.ndarray, *, mode: str = "sign",
-            y: jnp.ndarray = None, interpret: bool = False) -> jnp.ndarray:
+            y: jnp.ndarray = None, interpret: bool = False,
+            tiles=None) -> jnp.ndarray:
     """phi: (S, D); chunks: (n, D); returns (n, S).
 
-    Shapes must tile by (BN, BS, BD) after the ops.py wrapper's padding."""
+    Shapes must tile by (BN, BS, BD) after the ops.py wrapper's padding.
+    ``tiles=(bn, bs, bd)`` overrides the default VMEM tiling — the fused
+    decode loop (repro.decode.fused) passes full-extent contraction tiles in
+    interpret mode so the single in-kernel dot matches the einsum reference
+    bit for bit (DESIGN.md §9)."""
     n, d = chunks.shape
     s = phi.shape[0]
     assert phi.shape[1] == d, (phi.shape, chunks.shape)
-    bn, bs, bd = min(BN, n), min(BS, s), min(BD, d)
+    bn, bs, bd = tiles if tiles else (min(BN, n), min(BS, s), min(BD, d))
     assert n % bn == 0 and s % bs == 0 and d % bd == 0, \
         f"shapes ({n},{s},{d}) not tileable by ({bn},{bs},{bd})"
     n_bd = d // bd
@@ -83,10 +96,10 @@ def project(phi: jnp.ndarray, chunks: jnp.ndarray, *, mode: str = "sign",
         pl.BlockSpec((bs, bd), lambda i, j, k: (j, k)),   # phi
     ]
     args = [chunks, phi]
-    if mode == "sign_residual":
+    if mode in ("sign_residual", "residual"):
         in_specs.append(pl.BlockSpec((bn, bs), lambda i, j, k: (i, j)))
         args.append(y)
-        kernel = functools.partial(_proj_resid_kernel, n_bd=n_bd)
+        kernel = functools.partial(_proj_resid_kernel, n_bd=n_bd, mode=mode)
     else:
         kernel = functools.partial(_proj_kernel, n_bd=n_bd, mode=mode)
     return pl.pallas_call(

@@ -45,10 +45,14 @@ def _topk_kernel(x_ref, val_ref, mask_ref, *, k):
     mask_ref[...] = mask.astype(mask_ref.dtype)
 
 
-def topk_select(chunks: jnp.ndarray, k: int, *, interpret: bool = False):
-    """chunks: (n, D). Returns (masked values, int8 mask)."""
+def topk_select(chunks: jnp.ndarray, k: int, *, interpret: bool = False,
+                bn: int = None):
+    """chunks: (n, D). Returns (masked values, int8 mask).
+
+    ``bn`` overrides the rows-per-program tile (the fused decode loop keeps
+    all rows in one program in interpret mode)."""
     n, d = chunks.shape
-    bn = min(BN, n)
+    bn = min(BN, n) if bn is None else bn
     assert n % bn == 0, (n, bn)
     grid = (n // bn,)
     val, mask = pl.pallas_call(

@@ -33,6 +33,7 @@ def make_optimizer(tcfg: TrainConfig) -> Optimizer:
 def obcsaa_config(tcfg: TrainConfig) -> OBCSAAConfig:
     return OBCSAAConfig(chunk=tcfg.cs_chunk, measure=tcfg.cs_measure,
                         topk=tcfg.cs_topk, biht_iters=tcfg.biht_iters,
+                        decoder=tcfg.cs_decoder, recon_tau=tcfg.cs_tau,
                         noise_var=tcfg.noise_var, p_max=tcfg.p_max,
                         spmd_topk=True)
 

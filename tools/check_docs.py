@@ -1,0 +1,109 @@
+"""Docs consistency checker (the CI docs job).
+
+Three checks, exit non-zero on any failure:
+
+1. Internal markdown links in README.md and DESIGN.md resolve: relative
+   link targets exist on disk; ``#anchor`` fragments match a heading in
+   the target file (GitHub slugging, good enough for our headings).
+2. ``DESIGN.md §N`` references cited in docstrings/comments across
+   ``src/``, ``tests/``, ``benchmarks/`` and ``tools/`` point at sections
+   that actually exist in DESIGN.md.
+3. DESIGN.md § numbering is stable: sections are unique and contiguous
+   from §1 (the docstring cross-reference contract, DESIGN.md preamble).
+
+  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = [ROOT / "README.md", ROOT / "DESIGN.md"]
+CODE_DIRS = ["src", "tests", "benchmarks", "tools"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_RE = re.compile(r"^##\s+§(\d+)", re.MULTILINE)
+# §N references like "DESIGN.md §4", "DESIGN §9", "(DESIGN.md §4/§9)",
+# plus bare continuation refs "§4" inside the same parenthetical
+DESIGN_REF_RE = re.compile(r"DESIGN(?:\.md)?\s+§(\d+)((?:[/,]\s*§\d+)*)")
+EXTRA_REF_RE = re.compile(r"§(\d+)")
+
+
+def github_slug(heading: str) -> str:
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\s-]", "", s)
+    return re.sub(r"[\s]+", "-", s)
+
+
+def check_links(errors: list):
+    for doc in DOCS:
+        text = doc.read_text()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            tpath = (doc.parent / path_part if path_part else doc)
+            if not tpath.exists():
+                errors.append(f"{doc.name}: broken link target {target!r}")
+                continue
+            if anchor and tpath.suffix == ".md":
+                headings = re.findall(r"^#+\s+(.*)$", tpath.read_text(),
+                                      re.MULTILINE)
+                if anchor not in {github_slug(h) for h in headings}:
+                    errors.append(f"{doc.name}: anchor {target!r} matches no "
+                                  f"heading in {tpath.name}")
+
+
+def design_sections() -> set:
+    return {int(n) for n in SECTION_RE.findall(
+        (ROOT / "DESIGN.md").read_text())}
+
+
+def check_section_numbering(errors: list):
+    nums = SECTION_RE.findall((ROOT / "DESIGN.md").read_text())
+    as_int = [int(n) for n in nums]
+    if len(as_int) != len(set(as_int)):
+        errors.append(f"DESIGN.md: duplicate § numbers: {sorted(as_int)}")
+    if sorted(as_int) != list(range(1, len(as_int) + 1)):
+        errors.append("DESIGN.md: § numbering not contiguous from §1: "
+                      f"{sorted(as_int)}")
+
+
+def check_design_refs(errors: list):
+    known = design_sections()
+    for d in CODE_DIRS:
+        for path in (ROOT / d).rglob("*.py"):
+            text = path.read_text()
+            for m in DESIGN_REF_RE.finditer(text):
+                refs = [int(m.group(1))]
+                refs += [int(x) for x in EXTRA_REF_RE.findall(m.group(2))]
+                for ref in refs:
+                    if ref not in known:
+                        errors.append(
+                            f"{path.relative_to(ROOT)}: cites DESIGN.md "
+                            f"§{ref}, which does not exist "
+                            f"(have §{sorted(known)})")
+
+
+def main() -> int:
+    errors: list = []
+    check_links(errors)
+    check_section_numbering(errors)
+    check_design_refs(errors)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n_refs = sum(len(DESIGN_REF_RE.findall(p.read_text()))
+                 for d in CODE_DIRS for p in (ROOT / d).rglob("*.py"))
+    print(f"check_docs: OK ({len(design_sections())} DESIGN sections, "
+          f"{n_refs} § citations verified, links resolved)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
