@@ -9,7 +9,7 @@ import numpy as np
 from benchmarks.common import emit, run_fl
 from repro.core.error_floor import AnalysisConstants
 from repro.core.obcsaa import OBCSAAConfig
-from repro.core.scheduling import Problem, admm_solve, enumerate_solve
+from repro.sched import Problem, admm_solve, enumerate_solve
 
 ROUNDS = 100
 

@@ -18,14 +18,14 @@ def main() -> None:
                     help="paper-scale round counts (slow on CPU)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig1..fig5,kernels,"
-                         "decoders,ablations,roofline")
+                         "decoders,sched,ablations,roofline")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
     rounds = 300 if args.full else 60
 
     from benchmarks import (ablations, decoders_bench, fig1_sparsification,
                             fig2_dimension, fig3_scheduling, fig4_samples,
-                            fig5_noise, kernels_bench, roofline)
+                            fig5_noise, kernels_bench, roofline, sched_bench)
 
     from benchmarks.common import cached_suite
 
@@ -37,12 +37,14 @@ def main() -> None:
         "fig5": lambda: fig5_noise.main(rounds=max(40, rounds // 2)),
         "kernels": kernels_bench.main,
         "decoders": decoders_bench.main,
+        "sched": sched_bench.main,
         "ablations": lambda: ablations.main(rounds=max(40, rounds // 2)),
         "roofline": roofline.main,   # cheap, always fresh (reads dryrun/)
     }
-    # kernels + roofline always run fresh: they are the CI smoke steps and
-    # must exercise real code, not replay experiments/bench_cache.json
-    fresh = {"kernels", "roofline"}
+    # kernels + sched + roofline always run fresh: they are the CI smoke
+    # steps and must exercise real code, not replay
+    # experiments/bench_cache.json
+    fresh = {"kernels", "sched", "roofline"}
     print("name,us_per_call,derived", flush=True)
     for name, fn in suites.items():
         if only and name not in only:

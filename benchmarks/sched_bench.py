@@ -1,0 +1,149 @@
+"""Scheduling throughput: P2 instances/sec across solver implementations.
+
+The fleet question of DESIGN.md §10: how many (cell, round) P2 instances
+per second can each path schedule?
+
+- ``admm numpy``      — the per-instance float64 reference loop
+                        (``repro.sched.reference.admm_solve``), timed over
+                        a subsample and extrapolated per instance.
+- ``admm batched``    — ``admm_solve_batched``: jitted chunked-scan ADMM
+                        with convergence masking + compaction, B = 1024
+                        instances per device call.
+- ``greedy`` rows     — the loop reference vs the vectorized jnp prefix
+                        sweep vs the Pallas prefix kernel at large U.
+
+Acceptance gate (ISSUE 3): batched jitted ADMM ≥ 100× the NumPy loop's
+instances/sec at B = 1024, U = 64, with per-instance parity (β equal, R_t
+within float32 tolerance) — the ``admm_speedup`` row carries the measured
+ratio and parity check; ``greedy_kernel_parity`` carries the bit-for-bit
+interpret-mode check of the Pallas sweep against the jnp path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.error_floor import AnalysisConstants
+from repro.kernels.prefix_eval import prefix_eval
+from repro.sched import (BatchedProblem, Problem, SchedConfig,
+                         admm_solve, admm_solve_batched, greedy_solve,
+                         greedy_solve_batched)
+from repro.sched.greedy import pack_coefs, prefix_sweep
+
+B_ADMM, U_ADMM = 1024, 64      # the acceptance-gate shape
+B_GREEDY, U_GREEDY = 64, 8192  # the Pallas prefix-sweep shape
+NUMPY_SAMPLE = 24              # reference instances timed per solver
+PARITY_SAMPLE = 12
+
+CONST = AnalysisConstants(rho1=200.0, G=1.0)
+
+
+def make_problem(U, seed):
+    rng = np.random.default_rng(seed)
+    return Problem(h=np.abs(rng.normal(size=U)) + 1e-3,
+                   k_weights=np.full(U, 3000.0), p_max=10.0,
+                   noise_var=1e-4, D=50890, S=1000, kappa=1000, const=CONST)
+
+
+def _time(fn, reps=3):
+    fn()                                   # warm (compile + bucket shapes)
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _time_pair(fn_a, fn_b, trials=3):
+    """Best-of timing with the two measurements interleaved, so transient
+    CPU contention (the 2-core CI/container reality) hits both sides —
+    the min over trials estimates each side's uncontended speed."""
+    fn_a(), fn_b()                         # warm (compile + bucket shapes)
+    best_a = best_b = np.inf
+    for _ in range(trials):
+        t0 = time.time()
+        fn_a()
+        best_a = min(best_a, time.time() - t0)
+        t0 = time.time()
+        fn_b()
+        best_b = min(best_b, time.time() - t0)
+    return best_a, best_b
+
+
+def admm_rows():
+    probs = [make_problem(U_ADMM, 10_000 + i) for i in range(B_ADMM)]
+    bp = BatchedProblem.from_problems(probs)
+
+    sample = probs[:NUMPY_SAMPLE]
+    t_np, t_b = _time_pair(
+        lambda: [admm_solve(p) for p in sample],
+        lambda: jax.block_until_ready(admm_solve_batched(bp)))
+    per_np = t_np / len(sample)
+    rate_np = 1.0 / per_np
+    rate_b = B_ADMM / t_b
+
+    beta_b, bt_b, r_b = admm_solve_batched(bp)
+    mismatches, r_rel = 0, 0.0
+    for i in range(PARITY_SAMPLE):
+        beta_n, _, r_n = admm_solve(probs[i])
+        mismatches += not np.array_equal(np.asarray(beta_b[i]), beta_n)
+        r_rel = max(r_rel, abs(float(r_b[i]) - r_n) / r_n)
+    speedup = rate_b / rate_np
+    return [
+        (f"sched/admm_numpy_U{U_ADMM}", per_np * 1e6,
+         f"rate={rate_np:.1f}/s"),
+        (f"sched/admm_batched_B{B_ADMM}_U{U_ADMM}", t_b / B_ADMM * 1e6,
+         f"rate={rate_b:.0f}/s"),
+        (f"sched/admm_speedup_B{B_ADMM}_U{U_ADMM}", t_b * 1e6,
+         f"speedup={speedup:.1f}x;gate>=100x;beta_mismatch="
+         f"{mismatches}/{PARITY_SAMPLE};max_rel_R={r_rel:.1e}"),
+    ]
+
+
+def greedy_rows():
+    probs = [make_problem(U_GREEDY, 20_000 + i) for i in range(B_GREEDY)]
+    bp = BatchedProblem.from_problems(probs)
+
+    sample = probs[:4]
+    t_np = _time(lambda: [greedy_solve(p) for p in sample], reps=1)
+    per_np = t_np / len(sample)
+
+    t_v = _time(lambda: jax.block_until_ready(greedy_solve_batched(bp)))
+    kcfg = SchedConfig(use_kernel=True)
+    t_k = _time(lambda: jax.block_until_ready(
+        greedy_solve_batched(bp, kcfg)))
+
+    # bit-for-bit: jnp sweep vs Pallas kernel (interpret, full-extent tile)
+    caps = bp.caps()
+    order = jnp.argsort(-caps, axis=-1)
+    caps_s = jnp.take_along_axis(caps, order, -1)
+    k_s = jnp.take_along_axis(bp.k_weights, order, -1)
+    coefs = pack_coefs(bp)
+    r_jnp = jax.jit(prefix_sweep)(caps_s, k_s, coefs)
+    r_ker = jax.jit(lambda a, b, c: prefix_eval(a, b, c, interpret=True))(
+        caps_s, k_s, coefs)
+    bitwise = bool(jnp.all(r_jnp == r_ker))
+    return [
+        (f"sched/greedy_numpy_U{U_GREEDY}", per_np * 1e6,
+         f"rate={1.0 / per_np:.1f}/s"),
+        (f"sched/greedy_vectorized_B{B_GREEDY}_U{U_GREEDY}",
+         t_v / B_GREEDY * 1e6, f"rate={B_GREEDY / t_v:.0f}/s"),
+        (f"sched/greedy_pallas_B{B_GREEDY}_U{U_GREEDY}",
+         t_k / B_GREEDY * 1e6,
+         f"rate={B_GREEDY / t_k:.0f}/s;bitwise_vs_jnp={bitwise}"),
+    ]
+
+
+def main():
+    rows = admm_rows() + greedy_rows()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,7 @@ from repro.core.obcsaa import (OBCSAAConfig, comm_stats, compress_chunks,
                                reconstruct_chunks, shardmap_aggregate,
                                shardmap_compress, shardmap_reconstruct,
                                simulate_round)
-from repro.core.scheduling import (Problem, admm_solve, enumerate_solve,
+from repro.sched.reference import (Problem, admm_solve, enumerate_solve,
                                    greedy_solve, optimal_bt)
 
 __all__ = [

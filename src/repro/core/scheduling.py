@@ -1,187 +1,20 @@
-"""Joint worker-scheduling + power-scaling optimization (paper §IV).
+"""DEPRECATED — the P2 solvers moved to ``repro.sched`` (DESIGN.md §10).
 
-P2:  min_{b_t, β_t} R_t   s.t.  β_i² K_i² b_t² / h_i² ≤ P_i^Max, β ∈ {0,1}^U.
-
-Two solvers, as in the paper:
-- Algorithm 1 (``enumerate_solve``): exact — enumerate 2^U − 1 schedules; for
-  fixed β the optimal b_t is closed-form (R_t is strictly decreasing in b_t,
-  so b_t* sits on the tightest power boundary).
-- Algorithm 2 (``admm_solve``): O(U) ADMM on the P3 reformulation with
-  auxiliaries r_i = β_i q_i, q_i = b_t and multipliers (ν, ξ, ς).
+This shim keeps old imports working with a warning: the symbols below are
+the NumPy reference implementations, re-exported from
+``repro.sched.reference`` (kept there as the parity oracle for the batched
+device solvers). New code should call ``repro.sched.schedule`` (registry
+dispatch) or import from ``repro.sched`` directly.
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass
-from typing import Tuple
+import warnings
 
-import numpy as np
+from repro.sched.reference import (Problem, _rt, admm_solve,  # noqa: F401
+                                   enumerate_solve, greedy_solve,
+                                   optimal_bt)
 
-from repro.core.error_floor import AnalysisConstants
-
-
-@dataclass(frozen=True)
-class Problem:
-    """One round's P2 instance."""
-    h: np.ndarray            # (U,) channel magnitudes
-    k_weights: np.ndarray    # (U,) K_i
-    p_max: float             # P^Max (same for all workers, as in §V)
-    noise_var: float         # σ²
-    D: int
-    S: int
-    kappa: int
-    const: AnalysisConstants
-
-    @property
-    def U(self) -> int:
-        return len(self.h)
-
-
-def _rt(prob: Problem, beta: np.ndarray, b_t: float) -> float:
-    c = prob.const
-    K = prob.k_weights.sum()
-    denom = float((prob.k_weights * beta).sum()) * b_t
-    if denom <= 0:
-        return np.inf
-    C2 = c.C ** 2
-    r = (prob.k_weights * c.rho1 * (1.0 - beta)).sum() / K
-    r += C2 * (1.0 + (1.0 + c.delta) * (prob.D - prob.kappa)
-               / (prob.S * prob.D) * c.G ** 2
-               + prob.noise_var / denom ** 2)
-    r += beta.sum() * (1.0 + c.delta) * (prob.D - prob.kappa) / prob.D \
-        * c.G ** 2
-    return float(r)
-
-
-def optimal_bt(prob: Problem, beta: np.ndarray) -> float:
-    """R_t strictly decreases in b_t ⇒ b_t* = min_i scheduled h_i √P / K_i."""
-    sel = beta > 0
-    if not sel.any():
-        return 0.0
-    caps = prob.h[sel] * np.sqrt(prob.p_max) / prob.k_weights[sel]
-    return float(caps.min())
-
-
-def enumerate_solve(prob: Problem) -> Tuple[np.ndarray, float, float]:
-    """Algorithm 1. Returns (β*, b_t*, R_t*). O(2^U) — small U only."""
-    U = prob.U
-    best = (None, 0.0, np.inf)
-    for bits in itertools.product((0, 1), repeat=U):
-        beta = np.asarray(bits, np.float64)
-        if beta.sum() == 0:
-            continue
-        b = optimal_bt(prob, beta)
-        r = _rt(prob, beta, b)
-        if r < best[2]:
-            best = (beta, b, r)
-    return best
-
-
-def _step1_rb(prob: Problem, q, beta, nu, xi, zeta, b_prev, c_step,
-              inner_iters=50):
-    """Minimize L wrt (r, b): projected gradient on r (smooth convex) with
-    per-coordinate curvature steps, closed form for b."""
-    c2s2 = prob.const.C ** 2 * prob.noise_var
-    K = prob.k_weights
-    r = np.maximum(beta * q, 1e-8)
-    # per-coordinate Lipschitz of the quadratic parts
-    lip = 2.0 * nu * K ** 2 / prob.h ** 2 + c_step + 1e-6
-    for _ in range(inner_iters):
-        denom = max(float((K * r).sum()), 1e-9)
-        gQ1 = -2.0 * c2s2 / denom ** 3 * K
-        gpen = nu * 2.0 * K ** 2 * r / prob.h ** 2
-        glin = xi + c_step * (r - beta * q)
-        g = gQ1 + gpen + glin
-        r = np.maximum(r - g / lip, 1e-9)
-    b = float(np.mean(q) + np.mean(zeta) / c_step)
-    b = max(b, 1e-9)
-    return r, b
-
-
-def _step2_qbeta(prob: Problem, r, b, nu, xi, zeta, c_step):
-    """Per-worker closed forms for q under β=0 / β=1, pick the smaller
-    objective (eq. 34-36)."""
-    c = prob.const
-    K = prob.k_weights
-    Ksum = K.sum()
-    # beta = 0: q = b - zeta/c
-    q0 = np.maximum(b - zeta / c_step, 1e-9)
-    obj0 = (K * c.rho1 / Ksum
-            + xi * r + 0.5 * c_step * r ** 2
-            + zeta * (q0 - b) + 0.5 * c_step * (q0 - b) ** 2)
-    # beta = 1: q = (xi - zeta + c r + c b) / (2c)
-    q1 = np.maximum((xi - zeta + c_step * (r + b)) / (2.0 * c_step), 1e-9)
-    obj1 = ((1.0 + c.delta) * (prob.D - prob.kappa) / prob.D * c.G ** 2
-            + xi * (r - q1) + 0.5 * c_step * (r - q1) ** 2
-            + zeta * (q1 - b) + 0.5 * c_step * (q1 - b) ** 2)
-    beta = (obj1 < obj0).astype(np.float64)
-    q = np.where(beta > 0, q1, q0)
-    return q, beta
-
-
-def admm_solve(prob: Problem, *, c_step: float = 1.0, max_iters: int = 200,
-               abs_tol: float = 1e-4,
-               rel_tol: float = 1e-5) -> Tuple[np.ndarray, float, float]:
-    """Algorithm 2. Returns (β*, b_t*, R_t*). O(U) per iteration."""
-    U = prob.U
-    beta = np.ones(U)
-    b = max(optimal_bt(prob, beta), 1e-6)   # feasible warm start
-    q = np.full(U, b)
-    nu = np.zeros(U)
-    xi = np.zeros(U)
-    zeta = np.zeros(U)
-    for it in range(max_iters):
-        r, b_new = _step1_rb(prob, q, beta, nu, xi, zeta, b, c_step)
-        q, beta = _step2_qbeta(prob, r, b_new, nu, xi, zeta, c_step)
-        # Step 3: multiplier updates (37)-(39); ν projected to >= 0
-        nu = np.maximum(
-            nu + c_step * ((prob.k_weights * r / prob.h) ** 2 - prob.p_max),
-            0.0)
-        xi = xi + c_step * (r - beta * q)
-        zeta = zeta + c_step * (q - b_new)
-        prim = float(np.abs(q - b_new).sum())
-        drift = abs(b_new - b)
-        b = b_new
-        if prim < abs_tol and drift < rel_tol and it > 5:
-            break
-    # project: final β from ADMM, b_t from the exact power boundary
-    if beta.sum() == 0:
-        beta[np.argmax(prob.h * np.sqrt(prob.p_max) / prob.k_weights)] = 1.0
-    # one O(U²) flip-polish pass (engineering refinement over the paper's
-    # raw ADMM output; keeps the solver polynomial, documented in DESIGN.md)
-    best_r = _rt(prob, beta, optimal_bt(prob, beta))
-    improved = True
-    sweeps = 0
-    while improved and sweeps < 3:
-        improved = False
-        sweeps += 1
-        for i in range(U):
-            cand = beta.copy()
-            cand[i] = 1.0 - cand[i]
-            if cand.sum() == 0:
-                continue
-            r_c = _rt(prob, cand, optimal_bt(prob, cand))
-            if r_c < best_r - 1e-12:
-                beta, best_r = cand, r_c
-                improved = True
-    b_final = optimal_bt(prob, beta)
-    return beta, b_final, _rt(prob, beta, b_final)
-
-
-def greedy_solve(prob: Problem) -> Tuple[np.ndarray, float, float]:
-    """Beyond-paper baseline: sort workers by channel quality cap
-    h_i √P/K_i (descending); evaluate the U prefix schedules; pick best.
-    O(U log U) and, because R_t depends on β only through Σβ, ΣK_iβ and the
-    min-cap, the optimum is always a prefix of this ordering when K_i are
-    equal — making it exact for the paper's §V setup."""
-    caps = prob.h * np.sqrt(prob.p_max) / prob.k_weights
-    order = np.argsort(-caps)
-    best = (None, 0.0, np.inf)
-    beta = np.zeros(prob.U)
-    for i in order:
-        beta[i] = 1.0
-        b = optimal_bt(prob, beta)
-        r = _rt(prob, beta, b)
-        if r < best[2]:
-            best = (beta.copy(), b, r)
-    return best
+warnings.warn(
+    "repro.core.scheduling has moved to repro.sched; this compat shim "
+    "will be removed in a future PR (DESIGN.md §10).",
+    DeprecationWarning, stacklevel=2)

@@ -2,7 +2,9 @@
 
 Each round t:
   1. PS draws this round's block-fading channels h_{i,t} (known CSI).
-  2. PS solves P2 (scheduling method: all | enum | admm | greedy) -> β_t, b_t.
+  2. PS solves P2 via the repro.sched registry (scheduling method:
+     all | enum | admm | greedy | admm_batched | greedy_batched,
+     DESIGN.md §10) -> β_t, b_t.
   3. Scheduled workers compute local full-batch gradients (eq. 3), compress
      (eq. 6-7), power-scale (eq. 10) and transmit simultaneously.
   4. The MAC superimposes; PS adds AWGN, post-processes (eq. 13), decodes
@@ -38,7 +40,9 @@ from repro.optim.optimizers import Optimizer, sgd
 @dataclass
 class FLConfig:
     aggregator: str = "obcsaa"       # perfect | topk_aa | obcsaa
-    scheduler: str = "all"           # all | enum | admm | greedy
+    # P2 solver, dispatched through the repro.sched registry (DESIGN.md
+    # §10): all | enum | admm | greedy | admm_batched | greedy_batched
+    scheduler: str = "all"
     learning_rate: float = 0.1       # paper §V
     rounds: int = 300
     eval_every: int = 10

@@ -2,35 +2,27 @@
 broadcast (paper eq. 13-14, §IV)."""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.error_floor import AnalysisConstants
 from repro.core.obcsaa import OBCSAAConfig, reconstruct_chunks
-from repro.core.scheduling import (Problem, admm_solve, enumerate_solve,
-                                   greedy_solve, optimal_bt)
+from repro.sched import Problem, SchedConfig, schedule
 
 
 def schedule_round(method: str, h: np.ndarray, k_weights: np.ndarray,
-                   cfg: OBCSAAConfig, const: AnalysisConstants, D: int
+                   cfg: OBCSAAConfig, const: AnalysisConstants, D: int,
+                   sched_cfg: Optional[SchedConfig] = None
                    ) -> Tuple[np.ndarray, float]:
-    """Solve P2 for this round's channels. Returns (β, b_t)."""
+    """Solve P2 for this round's channels via the ``repro.sched`` registry
+    (DESIGN.md §10; method: all | enum | admm | greedy | admm_batched |
+    greedy_batched | any registered name). Returns (β, b_t)."""
     prob = Problem(h=h, k_weights=k_weights, p_max=cfg.p_max,
                    noise_var=cfg.noise_var, D=D, S=cfg.measure,
                    kappa=cfg.topk, const=const)
-    if method == "all":
-        beta = np.ones(len(h))
-        return beta, optimal_bt(prob, beta)
-    if method == "enum":
-        beta, bt, _ = enumerate_solve(prob)
-    elif method == "admm":
-        beta, bt, _ = admm_solve(prob)
-    elif method == "greedy":
-        beta, bt, _ = greedy_solve(prob)
-    else:
-        raise ValueError(f"unknown scheduling method {method!r}")
+    beta, bt, _ = schedule(prob, method, sched_cfg)
     return beta, bt
 
 

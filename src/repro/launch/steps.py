@@ -194,6 +194,43 @@ def round_ctx_specs(mesh):
             "key": key}
 
 
+def make_scheduled_round_ctx(mesh, tcfg: TrainConfig, D: int, *,
+                             scenario=None, method: str = "greedy_batched",
+                             seed: int = 0):
+    """P2-scheduled round contexts for the mesh train step (DESIGN.md §10).
+
+    Pre-generates a time-correlated fading trajectory for the mesh's U
+    workers (repro.sched.scenario) and returns ``round_ctx(t)``: each call
+    slices round t's channels, solves P2 through the batched scheduler
+    registry in one device call, and yields the {h, beta, b_t, key} dict
+    the OBCSAA train step consumes — the device-resident replacement for
+    ``default_round_ctx``'s everyone-scheduled stub. ``D`` is the model's
+    flat parameter count (the R_t dimension term)."""
+    from repro.core.error_floor import AnalysisConstants
+    from repro.sched import SchedConfig, round_problems, schedule
+    from repro.sched.scenario import ScenarioConfig, generate
+
+    U = num_workers(mesh)
+    scn = scenario or ScenarioConfig(rounds=256, cells=1, workers=U)
+    assert scn.workers == U, (scn.workers, U)
+    traj = generate(scn, jax.random.PRNGKey(seed))
+    const = AnalysisConstants()
+    cfg = SchedConfig()
+
+    def round_ctx(t: int):
+        prob = round_problems(traj, t % scn.rounds, k_weights=1.0,
+                              p_max=tcfg.p_max, noise_var=tcfg.noise_var,
+                              D=D, S=tcfg.cs_measure, kappa=tcfg.cs_topk,
+                              const=const)
+        beta, b_t, _ = schedule(prob, method, cfg)
+        return {"h": traj[t % scn.rounds, 0],
+                "beta": beta[0].astype(jnp.float32),
+                "b_t": b_t[0].astype(jnp.float32),
+                "key": jax.random.PRNGKey(seed * 100003 + t)}
+
+    return round_ctx
+
+
 # --- serve steps -------------------------------------------------------------------
 
 def make_prefill_step(model: Model) -> Callable:

@@ -1,0 +1,36 @@
+"""repro.sched — batched, device-resident P2 scheduling (paper §IV).
+
+The joint worker-scheduling + power-scaling optimization as a registry of
+interchangeable solvers behind one entry point (``schedule``), with the
+fleet path batched over B independent instances: ``BatchedProblem`` stacks
+(cell, round) P2 instances as pytree leaves, ``admm_solve_batched`` runs
+Algorithm 2 vmapped in one device call, ``greedy_solve_batched`` collapses
+the prefix search to sort + cumsum + argmin with a Pallas sweep kernel at
+large U, and ``scenario`` generates the time-correlated fading
+trajectories that feed them. See DESIGN.md §10.
+
+Layering: this package imports ``repro.kernels`` and the leaf analysis
+module ``repro.core.error_floor`` only; ``repro.core`` and
+``repro.fl`` consume it (``repro.core.scheduling`` is the deprecation shim
+over ``repro.sched.reference``, the NumPy parity oracle).
+"""
+from repro.sched.admm import admm_solve_batched
+from repro.sched.config import SchedConfig
+from repro.sched.greedy import greedy_solve_batched, prefix_sweep
+from repro.sched.problem import BatchedProblem, rt_from_stats
+from repro.sched.reference import (Problem, admm_solve, enumerate_solve,
+                                   greedy_prefix_bound, greedy_solve,
+                                   optimal_bt)
+from repro.sched.registry import (Scheduler, get_scheduler, list_schedulers,
+                                  register_scheduler, schedule)
+from repro.sched.scenario import (ScenarioConfig, generate, generate_fades,
+                                  round_problems)
+
+__all__ = [
+    "BatchedProblem", "Problem", "ScenarioConfig", "SchedConfig",
+    "Scheduler", "admm_solve", "admm_solve_batched", "enumerate_solve",
+    "generate", "generate_fades", "get_scheduler", "greedy_prefix_bound",
+    "greedy_solve", "greedy_solve_batched", "list_schedulers", "optimal_bt",
+    "prefix_sweep", "register_scheduler", "round_problems", "rt_from_stats",
+    "schedule",
+]

@@ -1,0 +1,33 @@
+"""Solver knobs shared by the batched P2 schedulers (DESIGN.md §10).
+
+Frozen + hashable so a ``SchedConfig`` rides as a jit static argument —
+changing a knob recompiles, changing channels never does.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class SchedConfig:
+    """ADMM (Algorithm 2) + flip-polish + prefix-sweep configuration.
+
+    The defaults mirror the NumPy reference (``repro.sched.reference``)
+    except ``inner_iters``: the step-1 projected gradient steps with
+    1/Lipschitz, which jumps to the local quadratic minimizer each
+    iteration, so the r-subproblem reaches its float32 fixed point in
+    ≲12 steps — 16 and the reference's 50 produce bit-identical β
+    schedules (tests/test_sched.py); the float64 oracle keeps 50 for
+    headroom."""
+    c_step: float = 1.0          # ADMM penalty c
+    max_iters: int = 200         # outer ADMM iterations (upper bound)
+    inner_iters: int = 16        # step-1 projected-gradient iterations
+    abs_tol: float = 1e-4        # primal residual Σ|q−b| tolerance
+    rel_tol: float = 1e-5        # b_t drift tolerance
+    polish_sweeps: int = 3       # flip-polish sweep cap
+    # greedy prefix sweep: route the (B, U) evaluation through the Pallas
+    # kernel (kernels/prefix_eval.py) instead of the jnp cumsum path
+    use_kernel: bool = False
+    interpret: Optional[bool] = None      # None -> auto (True off-TPU)
+    kernel_tiles: Optional[Tuple[int, int]] = None  # (bb, bu) override

@@ -1,0 +1,153 @@
+"""Batched, device-resident P2 instances (DESIGN.md §10).
+
+``BatchedProblem`` holds B independent P2 instances — one per (cell, round)
+pair of a fleet — as stacked ``(B, U)`` arrays registered as a jax pytree:
+the dynamic leaves are the channels, weights, per-worker power budgets
+(paper eq. 10 is P_i^Max, a per-worker quantity) and noise variances; the
+shape-defining analysis constants (D, S, κ, ``AnalysisConstants``) are
+static aux data, so jitted solvers retrace only when shapes or constants
+change, never on fresh channel draws (tests/test_sched.py recompile guard).
+
+``rt`` / ``optimal_bt`` are the jnp ports of the reference's R_t (eq. 24)
+and closed-form power scaler: they reduce over the **last** axis only, so
+they evaluate batched ``(B, U)`` inputs directly and stay vmappable over
+any leading axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.error_floor import AnalysisConstants
+from repro.kernels.prefix_eval import prefix_rt
+from repro.sched.reference import Problem
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class BatchedProblem:
+    """B stacked P2 instances; all per-worker arrays are (B, U)."""
+    h: jnp.ndarray            # (B, U) channel magnitudes
+    k_weights: jnp.ndarray    # (B, U) K_i
+    p_max: jnp.ndarray        # (B, U) per-worker P_i^Max (eq. 10)
+    noise_var: jnp.ndarray    # (B,) σ² per instance
+    D: int
+    S: int
+    kappa: int
+    const: AnalysisConstants
+
+    # -- pytree protocol: arrays are leaves, problem constants are static --
+    def tree_flatten(self):
+        return ((self.h, self.k_weights, self.p_max, self.noise_var),
+                (self.D, self.S, self.kappa, self.const))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        h, k_weights, p_max, noise_var = leaves
+        D, S, kappa, const = aux
+        return cls(h=h, k_weights=k_weights, p_max=p_max,
+                   noise_var=noise_var, D=D, S=S, kappa=kappa, const=const)
+
+    @property
+    def B(self) -> int:
+        return self.h.shape[0]
+
+    @property
+    def U(self) -> int:
+        return self.h.shape[-1]
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_arrays(cls, h, k_weights, p_max, noise_var, *, D: int, S: int,
+                    kappa: int, const: AnalysisConstants,
+                    dtype=jnp.float32) -> "BatchedProblem":
+        """Normalise broadcastable inputs: ``h`` fixes (B, U); ``k_weights``
+        and ``p_max`` accept scalars / (U,) / (B, U); ``noise_var`` accepts
+        a scalar or (B,)."""
+        h = jnp.atleast_2d(jnp.asarray(h, dtype))
+        B, U = h.shape
+        k = jnp.broadcast_to(jnp.asarray(k_weights, dtype), (B, U))
+        p = jnp.broadcast_to(jnp.asarray(p_max, dtype), (B, U))
+        nv = jnp.broadcast_to(jnp.asarray(noise_var, dtype), (B,))
+        return cls(h=h, k_weights=k, p_max=p, noise_var=nv, D=int(D),
+                   S=int(S), kappa=int(kappa), const=const)
+
+    @classmethod
+    def from_problems(cls, problems: Sequence[Problem],
+                      dtype=jnp.float32) -> "BatchedProblem":
+        """Stack NumPy reference instances (shared D/S/κ/constants)."""
+        p0 = problems[0]
+        for p in problems[1:]:
+            if (p.D, p.S, p.kappa, p.const) != (p0.D, p0.S, p0.kappa,
+                                                p0.const):
+                raise ValueError("from_problems requires shared "
+                                 "D/S/kappa/const across instances")
+        return cls.from_arrays(
+            np.stack([p.h for p in problems]),
+            np.stack([p.k_weights for p in problems]),
+            np.stack([p.p_max_vec for p in problems]),
+            np.asarray([p.noise_var for p in problems]),
+            D=p0.D, S=p0.S, kappa=p0.kappa, const=p0.const, dtype=dtype)
+
+    @classmethod
+    def single(cls, prob: Problem, dtype=jnp.float32) -> "BatchedProblem":
+        """Lift one reference instance to B = 1."""
+        return cls.from_problems([prob], dtype=dtype)
+
+    def instance(self, b: int) -> Problem:
+        """Extract instance ``b`` back to a NumPy reference Problem."""
+        return Problem(h=np.asarray(self.h[b], np.float64),
+                       k_weights=np.asarray(self.k_weights[b], np.float64),
+                       p_max=np.asarray(self.p_max[b], np.float64),
+                       noise_var=float(self.noise_var[b]), D=self.D,
+                       S=self.S, kappa=self.kappa, const=self.const)
+
+    # -- P2 quantities (last-axis reductions; batched and vmappable) -------
+    def caps(self) -> jnp.ndarray:
+        """Per-worker b_t ceiling h_i √(P_i^Max) / K_i (eq. 11)."""
+        return self.h * jnp.sqrt(self.p_max) / self.k_weights
+
+    def optimal_bt(self, beta: jnp.ndarray) -> jnp.ndarray:
+        """R_t strictly decreases in b_t ⇒ b_t* = min scheduled cap;
+        0 where nothing is scheduled (matches the reference)."""
+        sel = beta > 0
+        b = jnp.min(jnp.where(sel, self.caps(), jnp.inf), axis=-1)
+        return jnp.where(jnp.any(sel, axis=-1), b, 0.0)
+
+    def rt(self, beta: jnp.ndarray, b_t: jnp.ndarray) -> jnp.ndarray:
+        """Eq. (24) objective R_t per instance; +inf on empty schedules."""
+        c = self.const
+        K = jnp.sum(self.k_weights, axis=-1)
+        denom = jnp.sum(self.k_weights * beta, axis=-1) * b_t
+        safe = jnp.where(denom > 0, denom, 1.0)
+        C2 = c.C ** 2
+        r = jnp.sum(self.k_weights * c.rho1 * (1.0 - beta), axis=-1) / K
+        r += C2 * (1.0 + (1.0 + c.delta) * (self.D - self.kappa)
+                   / (self.S * self.D) * c.G ** 2
+                   + self.noise_var / safe ** 2)
+        r += jnp.sum(beta, axis=-1) * (1.0 + c.delta) \
+            * (self.D - self.kappa) / self.D * c.G ** 2
+        return jnp.where(denom > 0, r, jnp.inf)
+
+    def rt_coefs(self):
+        """Sufficient-statistic coefficients of R_t (DESIGN.md §10):
+        R(s1, s2, b) = ρ1(Ktot − s2)/Ktot + A + N/(s2·b)² + s1·E.
+        Returns per-instance (Ktot (B,), rho1, A, E, N (B,))."""
+        c = self.const
+        C2 = c.C ** 2
+        ktot = jnp.sum(self.k_weights, axis=-1)
+        A = C2 * (1.0 + (1.0 + c.delta) * (self.D - self.kappa)
+                  / (self.S * self.D) * c.G ** 2)
+        E = (1.0 + c.delta) * (self.D - self.kappa) / self.D * c.G ** 2
+        return ktot, c.rho1, A, E, C2 * self.noise_var
+
+
+def rt_from_stats(s1, s2, b, *, ktot, rho1, A, E, N):
+    """R_t from the sufficient statistics — the *same* formula object the
+    Pallas prefix kernel evaluates (identical op order keeps kernel/jnp
+    parity bit-for-bit, DESIGN.md §10)."""
+    return prefix_rt(s1, s2, b, ktot=ktot, rho1=rho1, A=A, E=E, N=N)

@@ -1,0 +1,133 @@
+"""Pluggable P2 scheduler registry — one entry point for §IV (Algorithms
+1-2 and beyond), mirroring the ``repro.decode`` pattern (DESIGN.md §10).
+
+``schedule(problem, method, cfg)`` dispatches on a registry name and on
+the problem's batching:
+
+- a NumPy reference ``Problem`` returns NumPy ``(β (U,), b_t, R_t)`` —
+  drop-in for the FL server's per-round call;
+- a ``BatchedProblem`` returns device arrays ``(β (B, U), b_t (B,),
+  R_t (B,))`` — the fleet path, one call per round for all cells.
+
+Built-ins:
+
+  all              schedule everyone; b_t on the power boundary
+  enum             Algorithm 1, exact O(2^U) (reference, small U)
+  admm             Algorithm 2 + flip-polish (NumPy reference oracle)
+  greedy           prefix search, loop form (reference oracle)
+  admm_batched     Algorithm 2 vmapped + while-converged (repro.sched.admm)
+  greedy_batched   vectorized/Pallas prefix sweep (repro.sched.greedy)
+
+Single instances lift to B = 1 for the batched entries; batched problems
+loop per instance through the reference entries (the parity/bench path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.sched import reference as ref
+from repro.sched.admm import admm_solve_batched
+from repro.sched.config import SchedConfig
+from repro.sched.greedy import greedy_solve_batched
+from repro.sched.problem import BatchedProblem
+from repro.sched.reference import Problem
+
+
+@dataclass(frozen=True)
+class Scheduler:
+    """Registry entry: solver fn + whether it consumes batched problems."""
+    fn: Callable
+    batched: bool = False
+
+
+_REGISTRY: Dict[str, Scheduler] = {}
+
+
+def register_scheduler(name: str, *, batched: bool = False):
+    """Register ``fn(problem, cfg) -> (beta, b_t, r)`` under ``name``.
+    ``batched=True`` entries take a ``BatchedProblem``; others take the
+    NumPy reference ``Problem``."""
+    def deco(fn):
+        _REGISTRY[name] = Scheduler(fn=fn, batched=batched)
+        return fn
+    return deco
+
+
+def get_scheduler(name: str) -> Scheduler:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown scheduling method {name!r}; registered: "
+                         f"{', '.join(list_schedulers())}") from None
+
+
+def list_schedulers():
+    return sorted(_REGISTRY)
+
+
+def _unbatch(beta, b_t, r):
+    return (np.asarray(beta[0], np.float64), float(b_t[0]), float(r[0]))
+
+
+def schedule(problem: Union[Problem, BatchedProblem], method: str = "greedy",
+             cfg: Optional[SchedConfig] = None
+             ) -> Tuple[np.ndarray, float, float]:
+    """Solve P2 with the scheduler registered under ``method``.
+
+    Returns ``(β, b_t, R_t)`` — NumPy scalars/arrays for a single
+    ``Problem``, device arrays for a ``BatchedProblem`` (see module
+    docstring)."""
+    sched = get_scheduler(method)
+    single = isinstance(problem, Problem)
+    if sched.batched:
+        bp = BatchedProblem.single(problem) if single else problem
+        out = sched.fn(bp, cfg)
+        return _unbatch(*out) if single else out
+    if single:
+        return sched.fn(problem, cfg)
+    # batched problem through a per-instance reference solver
+    outs = [sched.fn(problem.instance(b), cfg) for b in range(problem.B)]
+    return (np.stack([o[0] for o in outs]),
+            np.asarray([o[1] for o in outs]),
+            np.asarray([o[2] for o in outs]))
+
+
+# --- built-ins --------------------------------------------------------------------
+
+@register_scheduler("all")
+def _all(prob: Problem, cfg):
+    beta = np.ones(prob.U)
+    b_t = ref.optimal_bt(prob, beta)
+    return beta, b_t, ref._rt(prob, beta, b_t)
+
+
+@register_scheduler("enum")
+def _enum(prob: Problem, cfg):
+    return ref.enumerate_solve(prob)
+
+
+@register_scheduler("admm")
+def _admm(prob: Problem, cfg):
+    kw = {}
+    if cfg is not None:
+        kw = dict(c_step=cfg.c_step, max_iters=cfg.max_iters,
+                  abs_tol=cfg.abs_tol, rel_tol=cfg.rel_tol)
+    return ref.admm_solve(prob, **kw)
+
+
+@register_scheduler("greedy")
+def _greedy(prob: Problem, cfg):
+    return ref.greedy_solve(prob)
+
+
+@register_scheduler("admm_batched", batched=True)
+def _admm_batched(prob: BatchedProblem, cfg):
+    return admm_solve_batched(prob, cfg)
+
+
+@register_scheduler("greedy_batched", batched=True)
+def _greedy_batched(prob: BatchedProblem, cfg):
+    return greedy_solve_batched(prob, cfg)

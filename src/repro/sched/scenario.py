@@ -1,0 +1,144 @@
+"""Time-correlated fading scenario generator for fleet-scale scheduling.
+
+Produces ``(rounds, cells, U)`` channel-magnitude trajectories to feed the
+batched P2 solvers (DESIGN.md §10): each round is B = cells independent
+instances, each cell a parameter server with U workers. Extends the
+paper's i.i.d. block-fading §V setup (``core/channel.py``) along the axes
+the related work needs — temporal correlation (Fan et al. 2021, joint
+optimization over coupled rounds, arXiv:2104.03490) and realistic power
+control under fading (Liu et al. 2023, error-feedback one-bit OTA,
+arXiv:2303.11319):
+
+- **Small-scale fading**: first-order Gauss-Markov on the complex fade,
+  g_t = ρ g_{t−1} + √(1−ρ²) w_t with w ~ CN(0, 1), stationary at CN(0, 1)
+  so magnitudes keep the Rayleigh marginal (E|g|² = 1) with autocorrelation
+  E[g_t g*_{t+ℓ}] = ρ^ℓ. ``model="jakes"`` derives ρ = J₀(2π f_d T_s) from
+  the Doppler spread (Jakes block-fading equivalence); ``model="iid"``
+  (ρ = 0) recovers the paper's per-round redraw.
+- **Large-scale gain**: static per (cell, worker) — log-normal shadowing
+  (σ dB) and single-cell disk layouts with distance path loss — scaling
+  the per-worker amplitude, i.e. a per-worker power budget once pushed
+  through eq. 10's P_i^Max.
+
+Everything is jax: one ``lax.scan`` over rounds, PRNG-keyed, jit-able, so
+trajectory generation lives on device next to the solvers it feeds.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import H_MIN
+from repro.core.error_floor import AnalysisConstants
+from repro.sched.problem import BatchedProblem
+
+
+def bessel_j0(x: float) -> float:
+    """J₀ for the Jakes correlation coefficient (host-side scalar;
+    Abramowitz & Stegun 9.4.1 / 9.4.3, |err| < 2e-7)."""
+    ax = abs(x)
+    if ax <= 3.0:
+        y = (ax / 3.0) ** 2
+        return (1.0 + y * (-2.2499997 + y * (1.2656208 + y * (-0.3163866
+                + y * (0.0444479 + y * (-0.0039444 + y * 0.0002100))))))
+    z = 3.0 / ax
+    f0 = (0.79788456 + z * (-0.00000077 + z * (-0.00552740 + z * (
+        -0.00009512 + z * (0.00137237 + z * (-0.00072805
+                                             + z * 0.00014476))))))
+    t0 = (ax - 0.78539816 + z * (-0.04166397 + z * (-0.00003954 + z * (
+        0.00262573 + z * (-0.00054125 + z * (-0.00029333
+                                             + z * 0.00013558))))))
+    return f0 * math.cos(t0) / math.sqrt(ax)
+
+
+@dataclass(frozen=True)
+class ScenarioConfig:
+    """A fleet of ``cells`` cells × ``workers`` workers over ``rounds``
+    temporally correlated fading rounds."""
+    rounds: int = 100
+    cells: int = 16
+    workers: int = 64
+    model: str = "gauss_markov"   # gauss_markov | jakes | iid
+    corr: float = 0.9             # ρ (gauss_markov)
+    doppler_hz: float = 10.0      # f_d (jakes)
+    slot_s: float = 0.01          # round duration T_s (jakes)
+    shadowing_db: float = 0.0     # log-normal shadowing σ (dB); 0 = off
+    cell_radius: float = 0.0      # disk layout radius; 0 = unit gain
+    ref_dist: float = 0.05        # path-loss reference distance
+    pathloss_exp: float = 3.7     # path-loss exponent α
+    h_min: float = H_MIN          # clamp (channel-inversion boundedness)
+
+    @property
+    def rho(self) -> float:
+        if self.model == "gauss_markov":
+            return float(self.corr)
+        if self.model == "jakes":
+            return bessel_j0(2.0 * math.pi * self.doppler_hz * self.slot_s)
+        if self.model == "iid":
+            return 0.0
+        raise ValueError(f"unknown fading model {self.model!r} "
+                         "(gauss_markov|jakes|iid)")
+
+
+def generate_fades(cfg: ScenarioConfig, key) -> jnp.ndarray:
+    """Complex small-scale fades, (rounds, cells, U) complex64; stationary
+    CN(0, 1) marginal, lag-ℓ autocorrelation ρ^ℓ."""
+    rho = jnp.float32(cfg.rho)
+    innov = jnp.sqrt(jnp.maximum(1.0 - rho ** 2, 0.0))
+    shape = (cfg.cells, cfg.workers)
+
+    def cn(k):
+        re, im = jax.random.split(k)
+        return (jax.random.normal(re, shape)
+                + 1j * jax.random.normal(im, shape)) / jnp.sqrt(2.0)
+
+    k0, kw = jax.random.split(key)
+    g0 = cn(k0)
+    if cfg.rounds == 1:
+        return g0[None].astype(jnp.complex64)
+
+    def step(g, k):
+        g = rho * g + innov * cn(k)
+        return g, g
+
+    _, gs = jax.lax.scan(step, g0, jax.random.split(kw, cfg.rounds - 1))
+    return jnp.concatenate([g0[None].astype(jnp.complex64),
+                            gs.astype(jnp.complex64)], axis=0)
+
+
+def large_scale_gain(cfg: ScenarioConfig, key) -> jnp.ndarray:
+    """Static per-(cell, worker) amplitude gain: log-normal shadowing ×
+    disk-layout path loss, (cells, U) f32; all-ones when both are off."""
+    ks, kp = jax.random.split(key)
+    shape = (cfg.cells, cfg.workers)
+    gain = jnp.ones(shape, jnp.float32)
+    if cfg.shadowing_db > 0:
+        db = cfg.shadowing_db * jax.random.normal(ks, shape)
+        gain = gain * 10.0 ** (db / 20.0)
+    if cfg.cell_radius > 0:
+        # uniform-in-disk distance, clamped to the reference distance
+        d = cfg.cell_radius * jnp.sqrt(jax.random.uniform(kp, shape))
+        d = jnp.maximum(d, cfg.ref_dist)
+        gain = gain * (d / cfg.ref_dist) ** (-cfg.pathloss_exp / 2.0)
+    return gain
+
+
+def generate(cfg: ScenarioConfig, key) -> jnp.ndarray:
+    """Channel-magnitude trajectories |h|, (rounds, cells, U) f32,
+    clamped to ``h_min`` (bounded channel inversion, core/channel.py)."""
+    kf, kg = jax.random.split(key)
+    h = jnp.abs(generate_fades(cfg, kf)) * large_scale_gain(cfg, kg)[None]
+    return jnp.maximum(h.astype(jnp.float32), cfg.h_min)
+
+
+def round_problems(traj: jnp.ndarray, t, *, k_weights, p_max, noise_var,
+                   D: int, S: int, kappa: int,
+                   const: AnalysisConstants) -> BatchedProblem:
+    """Slice round ``t`` of a (rounds, cells, U) trajectory into a
+    B = cells ``BatchedProblem`` for the batched solvers."""
+    h = traj[t]                                          # (cells, U)
+    return BatchedProblem.from_arrays(h, k_weights, p_max, noise_var,
+                                      D=D, S=S, kappa=kappa, const=const)

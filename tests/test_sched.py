@@ -1,0 +1,318 @@
+"""repro.sched — batched P2 solvers vs the NumPy oracle (DESIGN.md §10).
+
+Parity contracts:
+- batched ADMM == reference ``admm_solve`` per instance over B ≥ 64 random
+  instances (β exact, R_t within float32 tolerance);
+- vectorized greedy == loop greedy bit-for-bit on the schedule (β and b_t
+  are picks from the same cap array) and greedy == enumeration for equal
+  K_i at U ≤ 12;
+- the Pallas prefix kernel == the jnp sweep bit-for-bit in interpret mode
+  (full-extent tiles under jit, the production path) and within float
+  tolerance for the tiled segmented path;
+- scenario trajectories keep the Rayleigh marginal and the Gauss-Markov
+  autocorrelation;
+- ``BatchedProblem`` is a pytree whose constants are static: fresh channel
+  draws never retrace the jitted solvers.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.error_floor import AnalysisConstants
+from repro.kernels.prefix_eval import prefix_eval
+from repro.sched import (BatchedProblem, Problem, ScenarioConfig,
+                         SchedConfig, admm_solve, admm_solve_batched,
+                         enumerate_solve, greedy_solve, greedy_solve_batched,
+                         list_schedulers, schedule)
+from repro.sched.greedy import pack_coefs, prefix_sweep
+from repro.sched.reference import _rt, greedy_prefix_bound, optimal_bt
+from repro.sched.scenario import bessel_j0, generate, generate_fades
+
+
+def make_problem(U=6, seed=0, rho1=200.0, G=1.0, p_max=10.0):
+    rng = np.random.default_rng(seed)
+    return Problem(h=np.abs(rng.normal(size=U)) + 1e-3,
+                   k_weights=np.full(U, 3000.0), p_max=p_max,
+                   noise_var=1e-4, D=50890, S=1000, kappa=1000,
+                   const=AnalysisConstants(rho1=rho1, G=G))
+
+
+def random_problems(n, U, seed=0, equal_k=True):
+    rng = np.random.default_rng(seed)
+    const = AnalysisConstants(rho1=200.0, G=1.0)
+    probs = []
+    for _ in range(n):
+        k = (np.full(U, 3000.0) if equal_k
+             else rng.uniform(1000.0, 5000.0, size=U))
+        probs.append(Problem(h=np.abs(rng.normal(size=U)) + 1e-3,
+                             k_weights=k, p_max=10.0, noise_var=1e-4,
+                             D=50890, S=1000, kappa=1000, const=const))
+    return probs
+
+
+# --- per-worker power budgets (paper eq. 10: P_i^Max) -----------------------------
+
+def test_per_worker_p_max_caps():
+    prob = make_problem(U=4, p_max=np.array([10.0, 10.0, 1e-6, 10.0]))
+    beta = np.ones(4)
+    # worker 2's tiny budget pins b_t to its boundary
+    bt = optimal_bt(prob, beta)
+    assert np.isclose(bt, prob.caps()[2])
+    p = (prob.k_weights * bt / prob.h) ** 2
+    assert (p <= prob.p_max_vec * (1 + 1e-9)).all()
+
+
+def test_scalar_p_max_broadcast_matches_vector():
+    ps, pv = make_problem(seed=3), make_problem(
+        seed=3, p_max=np.full(6, 10.0))
+    for solver in (enumerate_solve, admm_solve, greedy_solve):
+        bs, bts, rs = solver(ps)
+        bv, btv, rv = solver(pv)
+        assert np.array_equal(bs, bv) and bts == btv and rs == rv
+
+
+def test_admm_respects_per_worker_budgets():
+    rng = np.random.default_rng(7)
+    prob = make_problem(U=16, seed=7,
+                        p_max=rng.uniform(0.5, 20.0, size=16))
+    beta, bt, r = admm_solve(prob)
+    assert np.isfinite(r) and bt > 0
+    p = (prob.k_weights * beta * bt / prob.h) ** 2
+    assert (p <= prob.p_max_vec * (1 + 1e-6)).all()
+
+
+# --- batched ADMM vs the float64 oracle -------------------------------------------
+
+@pytest.mark.parametrize("equal_k", [True, False])
+def test_batched_admm_matches_numpy_per_instance(equal_k):
+    """B = 64 random instances in ONE device call == 64 scalar solves."""
+    probs = random_problems(64, U=8, seed=11, equal_k=equal_k)
+    bp = BatchedProblem.from_problems(probs)
+    beta_b, bt_b, r_b = jax.block_until_ready(admm_solve_batched(bp))
+    mismatched = 0
+    for i, p in enumerate(probs):
+        beta_n, bt_n, r_n = admm_solve(p)
+        mismatched += not np.array_equal(np.asarray(beta_b[i]), beta_n)
+        # float32 batched vs float64 oracle: R_t parity is tolerance-based
+        assert abs(float(r_b[i]) - r_n) / r_n < 1e-4, i
+        assert abs(float(bt_b[i]) - bt_n) / max(bt_n, 1e-12) < 1e-4, i
+    # β decisions may flip only on numerically marginal workers
+    assert mismatched <= 1
+
+
+@pytest.mark.parametrize("equal_k", [True, False])
+def test_inner_budget_16_equals_50_bitwise(equal_k):
+    """The step-1 projected gradient steps with 1/Lipschitz and reaches
+    its float32 fixed point in ≲12 iterations: the default device budget
+    (16) and the reference's 50 yield bit-identical schedules."""
+    probs = random_problems(48, U=16, seed=31, equal_k=equal_k)
+    bp = BatchedProblem.from_problems(probs)
+    out16 = admm_solve_batched(bp, SchedConfig(inner_iters=16))
+    out50 = admm_solve_batched(bp, SchedConfig(inner_iters=50))
+    assert bool(jnp.all(out16[0] == out50[0]))
+    assert bool(jnp.all(out16[1] == out50[1]))
+
+
+def test_batched_admm_feasible_at_large_u():
+    probs = random_problems(4, U=64, seed=5)
+    bp = BatchedProblem.from_problems(probs)
+    beta, bt, r = admm_solve_batched(bp)
+    assert beta.shape == (4, 64) and bool(jnp.all(jnp.isfinite(r)))
+    p = (bp.k_weights * beta * bt[:, None] / bp.h) ** 2
+    assert bool(jnp.all(p <= bp.p_max * (1 + 1e-5)))
+
+
+def test_admm_polish_early_exit_bound():
+    """The greedy prefix bound is a true lower bound on what the polish
+    can reach from a prefix-family schedule (equal K ⇒ optimum)."""
+    for seed in range(4):
+        prob = make_problem(U=10, seed=seed)
+        _, _, r_admm = admm_solve(prob)
+        assert r_admm <= greedy_prefix_bound(prob) * (1 + 1e-6)
+
+
+# --- greedy: vectorized == loop, exact for equal K --------------------------------
+
+def test_vectorized_greedy_matches_loop_bitwise():
+    """β and b_t are picks from the same cap array — bit-for-bit; R_t is
+    recomputed arithmetic, compared at float32 tolerance."""
+    probs = random_problems(50, U=24, seed=2, equal_k=False)
+    bp = BatchedProblem.from_problems(probs)
+    beta_v, bt_v, r_v = greedy_solve_batched(bp)
+    for i, p in enumerate(probs):
+        beta_l, bt_l, r_l = greedy_solve(p)
+        assert np.array_equal(np.asarray(beta_v[i]), beta_l), i
+        assert np.isclose(float(bt_v[i]), bt_l, rtol=1e-6), i
+        assert np.isclose(float(r_v[i]), r_l, rtol=1e-5), i
+
+
+@pytest.mark.parametrize("U", [6, 10, 12])
+def test_batched_greedy_equals_enumeration_equal_k(U):
+    """Equal K_i ⇒ the prefix optimum IS the global optimum (U ≤ 12)."""
+    for seed in range(3):
+        prob = make_problem(U=U, seed=seed + 20)
+        _, _, r_enum = enumerate_solve(prob)
+        beta, bt, r = greedy_solve_batched(BatchedProblem.single(prob))
+        assert np.isclose(float(r[0]), r_enum, rtol=1e-5), (U, seed)
+        # and the reported R_t is consistent with the oracle objective
+        r_check = _rt(prob, np.asarray(beta[0], np.float64), float(bt[0]))
+        assert np.isclose(r_check, r_enum, rtol=1e-5)
+
+
+# --- Pallas prefix kernel ----------------------------------------------------------
+
+def _sorted_inputs(B=4, U=8192, seed=0):
+    h = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (B, U))) + 1e-3
+    bp = BatchedProblem.from_arrays(
+        h, 3000.0, 10.0, 1e-4, D=508900, S=1000, kappa=1000,
+        const=AnalysisConstants(rho1=200.0, G=1.0))
+    caps = bp.caps()
+    order = jnp.argsort(-caps, axis=-1)
+    return (jnp.take_along_axis(caps, order, -1),
+            jnp.take_along_axis(bp.k_weights, order, -1), pack_coefs(bp)), bp
+
+
+def test_prefix_kernel_bitwise_vs_jnp_interpret():
+    """Full-extent interpret tiles under jit == the jnp sweep bit-for-bit
+    (the production path jits both; DESIGN.md §10 tiling policy)."""
+    (caps_s, k_s, coefs), _ = _sorted_inputs()
+    r_jnp = jax.jit(prefix_sweep)(caps_s, k_s, coefs)
+    r_ker = jax.jit(lambda a, b, c: prefix_eval(a, b, c, interpret=True))(
+        caps_s, k_s, coefs)
+    assert bool(jnp.all(r_jnp == r_ker))
+
+
+def test_prefix_kernel_tiled_segmented_carry():
+    """The tiled path (segmented ΣK carry across U tiles) agrees to float
+    tolerance and picks the same prefix, including non-divisible U."""
+    (caps_s, k_s, coefs), _ = _sorted_inputs(B=3, U=1000, seed=1)
+    r_jnp = jax.jit(prefix_sweep)(caps_s, k_s, coefs)
+    r_tiled = prefix_eval(caps_s, k_s, coefs, interpret=True,
+                          tiles=(2, 128))
+    assert r_tiled.shape == r_jnp.shape
+    assert bool(jnp.allclose(r_jnp, r_tiled, rtol=1e-5))
+    assert bool(jnp.all(jnp.argmin(r_jnp, -1) == jnp.argmin(r_tiled, -1)))
+
+
+def test_greedy_kernel_path_matches_jnp_path():
+    _, bp = _sorted_inputs(B=4, U=4096, seed=2)
+    beta_j, bt_j, _ = greedy_solve_batched(bp)
+    beta_k, bt_k, _ = greedy_solve_batched(
+        bp, SchedConfig(use_kernel=True, interpret=True))
+    assert bool(jnp.all(beta_j == beta_k)) and bool(jnp.all(bt_j == bt_k))
+
+
+# --- scenario generator -------------------------------------------------------------
+
+def test_scenario_rayleigh_marginal_and_autocorr():
+    cfg = ScenarioConfig(rounds=400, cells=4, workers=64, corr=0.9)
+    g = generate_fades(cfg, jax.random.PRNGKey(1))
+    assert g.shape == (400, 4, 64)
+    mag = jnp.abs(g)
+    # CN(0,1) fades: E|g|² = 1, E|g| = √π/2 (Rayleigh σ = 1/√2)
+    assert abs(float(jnp.mean(mag ** 2)) - 1.0) < 0.05
+    assert abs(float(jnp.mean(mag)) - np.sqrt(np.pi) / 2) < 0.02
+    gf = g.reshape(cfg.rounds, -1)
+    for lag in (1, 3):
+        ac = float(jnp.mean(jnp.real(gf[lag:] * jnp.conj(gf[:-lag]))))
+        assert abs(ac - cfg.rho ** lag) < 0.05, lag
+
+
+def test_scenario_jakes_and_iid_rho():
+    jakes = ScenarioConfig(model="jakes", doppler_hz=10.0, slot_s=0.01)
+    assert np.isclose(jakes.rho, bessel_j0(2 * np.pi * 0.1), atol=1e-12)
+    assert np.isclose(bessel_j0(1.0), 0.7651977, atol=2e-7)
+    assert np.isclose(bessel_j0(5.0), -0.1775968, atol=2e-7)
+    assert ScenarioConfig(model="iid").rho == 0.0
+    with pytest.raises(ValueError):
+        _ = ScenarioConfig(model="nope").rho
+
+
+def test_scenario_magnitudes_clamped_and_shadowed():
+    cfg = ScenarioConfig(rounds=8, cells=2, workers=16, shadowing_db=8.0,
+                         cell_radius=1.0)
+    h = generate(cfg, jax.random.PRNGKey(3))
+    assert h.shape == (8, 2, 16)
+    assert float(h.min()) >= cfg.h_min
+
+
+# --- registry + pytree/jit behaviour ------------------------------------------------
+
+def test_registry_dispatch_and_single_lift():
+    assert {"all", "enum", "admm", "greedy", "admm_batched",
+            "greedy_batched"} <= set(list_schedulers())
+    prob = make_problem(seed=4)
+    with pytest.raises(ValueError, match="unknown scheduling method"):
+        schedule(prob, "nope")
+    beta_ref, bt_ref, r_ref = schedule(prob, "greedy")
+    beta_b, bt_b, r_b = schedule(prob, "greedy_batched")
+    assert isinstance(beta_b, np.ndarray) and isinstance(bt_b, float)
+    assert np.array_equal(beta_ref, beta_b)
+    assert np.isclose(bt_ref, bt_b, rtol=1e-6)
+    # batched problem through a reference entry: per-instance loop
+    bp = BatchedProblem.from_problems(random_problems(3, U=6, seed=9))
+    beta, bt, r = schedule(bp, "greedy")
+    assert beta.shape == (3, 6) and bt.shape == (3,)
+
+
+def test_schedule_all_matches_power_boundary():
+    prob = make_problem(seed=6)
+    beta, bt, _ = schedule(prob, "all")
+    assert beta.sum() == prob.U
+    assert np.isclose(bt, optimal_bt(prob, np.ones(prob.U)), rtol=1e-12)
+
+
+def test_batched_problem_no_recompile_on_new_channels():
+    """Static aux (D/S/κ/const) + array leaves ⇒ one trace per shape."""
+    traces = []
+
+    @jax.jit
+    def solve(prob):
+        traces.append(1)
+        return prefix_sweep(prob.h, prob.k_weights, pack_coefs(prob))
+
+    const = AnalysisConstants()
+    for seed in range(3):
+        h = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (8, 16))) \
+            + 1e-3
+        bp = BatchedProblem.from_arrays(h, 3000.0, 10.0, 1e-4, D=50890,
+                                        S=1000, kappa=1000, const=const)
+        solve(bp).block_until_ready()
+    assert len(traces) == 1
+    # the public solvers are jitted with the same pytree contract
+    for seed in range(3):
+        h = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (4, 8))) \
+            + 1e-3
+        bp = BatchedProblem.from_arrays(h, 3000.0, 10.0, 1e-4, D=50890,
+                                        S=1000, kappa=1000, const=const)
+        greedy_solve_batched(bp)
+        admm_solve_batched(bp)
+
+
+def test_core_scheduling_shim_warns_and_reexports():
+    import importlib
+    import repro.core.scheduling as shim
+    with pytest.warns(DeprecationWarning, match="moved to repro.sched"):
+        importlib.reload(shim)
+    from repro.sched import reference
+    assert shim.admm_solve is reference.admm_solve
+    assert shim.Problem is reference.Problem
+
+
+def test_scheduled_round_ctx_smoke():
+    """launch/steps.py device-resident scheduling path (DESIGN.md §10)."""
+    from jax.sharding import Mesh
+    from repro.configs.base import TrainConfig
+    from repro.launch.steps import make_scheduled_round_ctx
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("pod", "data", "model"))
+    tcfg = TrainConfig()
+    ctx_fn = make_scheduled_round_ctx(mesh, tcfg, D=50890)
+    ctx = ctx_fn(0)
+    U = 1
+    assert ctx["beta"].shape == (U,) and ctx["h"].shape == (U,)
+    assert float(ctx["b_t"]) > 0
+    assert set(ctx) == {"h", "beta", "b_t", "key"}

@@ -1,9 +1,11 @@
-"""P2 solvers: Algorithm 1 (enumeration) vs Algorithm 2 (ADMM) vs greedy."""
+"""P2 reference solvers: Algorithm 1 (enumeration) vs Algorithm 2 (ADMM)
+vs greedy. The batched device solvers are tested against these oracles in
+tests/test_sched.py (DESIGN.md §10)."""
 import numpy as np
 import pytest
 
 from repro.core.error_floor import AnalysisConstants
-from repro.core.scheduling import (Problem, _rt, admm_solve, enumerate_solve,
+from repro.sched.reference import (Problem, _rt, admm_solve, enumerate_solve,
                                    greedy_solve, optimal_bt)
 
 

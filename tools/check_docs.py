@@ -1,6 +1,6 @@
 """Docs consistency checker (the CI docs job).
 
-Three checks, exit non-zero on any failure:
+Four checks, exit non-zero on any failure:
 
 1. Internal markdown links in README.md and DESIGN.md resolve: relative
    link targets exist on disk; ``#anchor`` fragments match a heading in
@@ -10,6 +10,9 @@ Three checks, exit non-zero on any failure:
    that actually exist in DESIGN.md.
 3. DESIGN.md § numbering is stable: sections are unique and contiguous
    from §1 (the docstring cross-reference contract, DESIGN.md preamble).
+4. The subsystem sections (``REQUIRED_CITED``: the worker-axes mapping §3,
+   chunked-Φ §4, decode §9, sched §10) are each cited from code at least
+   once — a renumbering or a subsystem losing its docs trail fails CI.
 
   python tools/check_docs.py
 """
@@ -29,6 +32,8 @@ SECTION_RE = re.compile(r"^##\s+§(\d+)", re.MULTILINE)
 # plus bare continuation refs "§4" inside the same parenthetical
 DESIGN_REF_RE = re.compile(r"DESIGN(?:\.md)?\s+§(\d+)((?:[/,]\s*§\d+)*)")
 EXTRA_REF_RE = re.compile(r"§(\d+)")
+# subsystem sections that must stay cited from code (check 4)
+REQUIRED_CITED = {3, 4, 9, 10}
 
 
 def github_slug(heading: str) -> str:
@@ -74,18 +79,23 @@ def check_section_numbering(errors: list):
 
 def check_design_refs(errors: list):
     known = design_sections()
+    cited = set()
     for d in CODE_DIRS:
         for path in (ROOT / d).rglob("*.py"):
             text = path.read_text()
             for m in DESIGN_REF_RE.finditer(text):
                 refs = [int(m.group(1))]
                 refs += [int(x) for x in EXTRA_REF_RE.findall(m.group(2))]
+                cited.update(refs)
                 for ref in refs:
                     if ref not in known:
                         errors.append(
                             f"{path.relative_to(ROOT)}: cites DESIGN.md "
                             f"§{ref}, which does not exist "
                             f"(have §{sorted(known)})")
+    for ref in sorted(REQUIRED_CITED - cited):
+        errors.append(f"DESIGN.md §{ref} is a subsystem section but no "
+                      f"code cites it (REQUIRED_CITED)")
 
 
 def main() -> int:
