@@ -3,60 +3,47 @@
 - error feedback (Stich et al., paper ref [37]) on top of OBCSAA
 - non-iid worker data (label-skewed partitions)
 - scheduler comparison under low SNR (where scheduling matters most)
+
+All rows run on the scan engine (DESIGN.md §11) with seeds as batched
+arms; the static toggles (EF, iid, scheduler) select engine builds, and
+the low-SNR pair shares its seeds axis within each build.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import emit, mnist_setup, run_fl
+from benchmarks.common import acc_summary, run_fl_sweep, emit
 from repro.core.obcsaa import OBCSAAConfig
-from repro.data import load_mnist, partition_workers
-from repro.fl import FederatedTrainer, FLConfig
-from repro.models.mlp_mnist import (init_mlp_mnist, mlp_mnist_accuracy,
-                                    mlp_mnist_loss)
 
 ROUNDS = 80
+SEEDS = (0, 1)
 
 
-def _run(agg, rounds, *, ef=False, iid=True, scheduler="all", noise=1e-4,
-         U=10, K=1000):
-    xtr, ytr, xte, yte = load_mnist()
-    wx, wy = partition_workers(xtr, ytr, U, K, iid=iid, seed=0)
-    wd = {"x": jnp.asarray(wx), "y": jnp.asarray(wy)}
-    p0 = init_mlp_mnist(jax.random.PRNGKey(0))
-    xe, ye = jnp.asarray(xte[:2000]), jnp.asarray(yte[:2000])
-    ev = jax.jit(lambda p: (mlp_mnist_loss(p, xe, ye),
-                            mlp_mnist_accuracy(p, xe, ye)))
-
-    def loss_fn(p, d):
-        return mlp_mnist_loss(p, d["x"], d["y"])
-
+def _sweep(rounds, *, ef=False, iid=True, scheduler="all", noise=1e-4):
     ob = OBCSAAConfig(chunk=4096, measure=1024, topk=80, biht_iters=25,
                       noise_var=noise)
-    cfg = FLConfig(aggregator=agg, scheduler=scheduler, rounds=rounds,
-                   eval_every=rounds - 1, obcsaa=ob, error_feedback=ef)
-    tr = FederatedTrainer(cfg, loss_fn, p0, wd, np.full(U, float(K)),
-                          eval_fn=ev)
-    logs = tr.run()
-    return logs[-1]
+    return run_fl_sweep("obcsaa", rounds=rounds, U=10, K=1000,
+                        scheduler=scheduler, obcsaa=ob, seeds=SEEDS,
+                        error_feedback=ef, iid=iid,
+                        eval_every=rounds - 1)
 
 
 def main(rounds=ROUNDS):
     rows = []
-    base = _run("obcsaa", rounds)
-    ef = _run("obcsaa", rounds, ef=True)
-    rows.append(("ablate/obcsaa", 0.0, f"acc={base.accuracy:.4f}"))
-    rows.append(("ablate/obcsaa_ef", 0.0,
-                 f"acc={ef.accuracy:.4f};delta={ef.accuracy-base.accuracy:+.4f}"))
-    noniid = _run("obcsaa", rounds, iid=False)
-    rows.append(("ablate/obcsaa_noniid", 0.0, f"acc={noniid.accuracy:.4f}"))
+    base = _sweep(rounds)
+    ef = _sweep(rounds, ef=True)
+    rows.append(("ablate/obcsaa", base["us_per_round"], acc_summary(base)))
+    d = float(ef["final_acc"].mean() - base["final_acc"].mean())
+    rows.append(("ablate/obcsaa_ef", ef["us_per_round"],
+                 f"{acc_summary(ef)};delta={d:+.4f}"))
+    noniid = _sweep(rounds, iid=False)
+    rows.append(("ablate/obcsaa_noniid", noniid["us_per_round"],
+                 acc_summary(noniid)))
     # low-SNR scheduling: ADMM-scheduled vs all-in
-    allin = _run("obcsaa", rounds, noise=1e-1)
-    sched = _run("obcsaa", rounds, noise=1e-1, scheduler="admm")
-    rows.append(("ablate/lowsnr_all", 0.0, f"acc={allin.accuracy:.4f}"))
-    rows.append(("ablate/lowsnr_admm", 0.0, f"acc={sched.accuracy:.4f}"))
+    allin = _sweep(rounds, noise=1e-1)
+    sched = _sweep(rounds, noise=1e-1, scheduler="admm_batched")
+    rows.append(("ablate/lowsnr_all", allin["us_per_round"],
+                 acc_summary(allin)))
+    rows.append(("ablate/lowsnr_admm", sched["us_per_round"],
+                 acc_summary(sched)))
     emit(rows)
     return rows
 

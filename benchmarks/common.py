@@ -17,12 +17,12 @@ from repro.models.mlp_mnist import (init_mlp_mnist, mlp_mnist_accuracy,
 _CACHE = {}
 
 
-def mnist_setup(U=10, K=3000, seed=0, n_eval=2000):
-    key = (U, K, seed, n_eval)
+def mnist_setup(U=10, K=3000, seed=0, n_eval=2000, iid=True):
+    key = (U, K, seed, n_eval, iid)
     if key in _CACHE:
         return _CACHE[key]
     xtr, ytr, xte, yte = load_mnist()
-    wx, wy = partition_workers(xtr, ytr, U, K, seed=seed)
+    wx, wy = partition_workers(xtr, ytr, U, K, seed=seed, iid=iid)
     worker_data = {"x": jnp.asarray(wx), "y": jnp.asarray(wy)}
     params0 = init_mlp_mnist(jax.random.PRNGKey(0))
     xe, ye = jnp.asarray(xte[:n_eval]), jnp.asarray(yte[:n_eval])
@@ -56,6 +56,51 @@ def run_fl(agg: str, *, rounds=120, U=10, K=3000, scheduler="all",
     return {"logs": logs, "wall_s": wall,
             "final_loss": logs[-1].loss, "final_acc": logs[-1].accuracy,
             "us_per_round": 1e6 * wall / rounds}
+
+
+def run_fl_sweep(agg: str, *, rounds=120, U=10, K=3000, scheduler="all",
+                 obcsaa: OBCSAAConfig = None, topk_dense=1000,
+                 eval_every=20, seeds=(0,), noise_var=None, p_max=None,
+                 lr=None, error_feedback=False, iid=True) -> Dict:
+    """Engine-backed arms sweep (DESIGN.md §11): every (seed × σ² × P^Max
+    × α) combination advances as ONE scan×vmap program — the batched
+    replacement for looping ``run_fl`` per fig-script arm. Static knobs
+    (κ, S, aggregator, scheduler) stay per-call; pass sequences for the
+    dynamic axes. Returns the engine sweep dict plus per-arm finals and
+    the per-arm-round wall clock."""
+    from repro.engine import run_sweep as engine_run_sweep
+
+    worker_data, params0, eval_fn, loss_fn = mnist_setup(U=U, K=K, iid=iid)
+    cfg = FLConfig(aggregator=agg, scheduler=scheduler, rounds=rounds,
+                   eval_every=eval_every,
+                   obcsaa=obcsaa or OBCSAAConfig(chunk=4096, measure=1024,
+                                                 topk=80, biht_iters=25),
+                   topk_dense=topk_dense, error_feedback=error_feedback)
+    t0 = time.time()
+    out = engine_run_sweep(cfg, loss_fn, params0, worker_data,
+                           np.full(U, float(K)), eval_fn=eval_fn,
+                           rounds=rounds, eval_every=eval_every,
+                           seeds=list(seeds), noise_var=noise_var,
+                           p_max=p_max, lr=lr)
+    wall = time.time() - t0
+    A = out["accuracy"].shape[0]
+    out.update({
+        "wall_s": wall,
+        "final_acc": out["accuracy"][:, -1],
+        "final_loss": out["loss"][:, -1],
+        "us_per_round": 1e6 * wall / (rounds * A),
+    })
+    return out
+
+
+def acc_summary(out) -> str:
+    """``acc=…;loss=…`` derived string for a sweep's per-arm finals:
+    mean over arms, with the spread when the sweep has >1 arm."""
+    acc, loss = out["final_acc"], out["final_loss"]
+    s = f"acc={np.mean(acc):.4f};loss={np.mean(loss):.4f}"
+    if len(acc) > 1:
+        s += f";arms={len(acc)};acc_std={np.std(acc):.4f}"
+    return s
 
 
 def emit(rows: List[tuple]):

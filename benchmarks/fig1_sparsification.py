@@ -1,26 +1,30 @@
 """Paper Fig. 1: OBCSAA under different sparsification levels κ vs perfect
 aggregation. Sweeps per-chunk κ_c at fixed S_c (paper: κ ∈ {10..1000},
-S=10000, D=50890; here the equivalent per-chunk budgets)."""
+S=10000, D=50890; here the equivalent per-chunk budgets).
+
+κ is compile-static (top-κ selection shapes), so each κ builds one
+engine; WITHIN each build the seeds axis runs as vmapped batched arms in
+a single scan×vmap program (DESIGN.md §11)."""
 from __future__ import annotations
 
-from benchmarks.common import emit, run_fl
+from benchmarks.common import acc_summary, emit, run_fl_sweep
 from repro.core.obcsaa import OBCSAAConfig
 
 # per-chunk κ_c equivalents of the paper's κ over D=50890 with 13 chunks
 KAPPAS = [8, 26, 80, 160]       # ≈ paper κ = 100, 330, 1000, 2000
 ROUNDS = 120
+SEEDS = (0, 1, 2)
 
 
 def main(rounds=ROUNDS):
     rows = []
-    r = run_fl("perfect", rounds=rounds)
-    rows.append(("fig1/perfect", r["us_per_round"],
-                 f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f}"))
+    r = run_fl_sweep("perfect", rounds=rounds, seeds=SEEDS)
+    rows.append(("fig1/perfect", r["us_per_round"], acc_summary(r)))
     for k in KAPPAS:
         ob = OBCSAAConfig(chunk=4096, measure=1024, topk=k, biht_iters=25)
-        r = run_fl("obcsaa", rounds=rounds, obcsaa=ob)
+        r = run_fl_sweep("obcsaa", rounds=rounds, obcsaa=ob, seeds=SEEDS)
         rows.append((f"fig1/obcsaa_kappa{k}x13", r["us_per_round"],
-                     f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f}"))
+                     acc_summary(r)))
     emit(rows)
     return rows
 

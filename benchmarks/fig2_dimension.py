@@ -1,24 +1,28 @@
 """Paper Fig. 2: impact of the reduced dimension S (per-chunk S_c here).
 Paper: S ∈ {1000..10000} at κ=1000; performance saturates with S and trades
-off against communication (latency fraction S/D)."""
+off against communication (latency fraction S/D).
+
+S is compile-static (Φ shapes): one engine build per S, seeds vmapped as
+batched arms inside each build (DESIGN.md §11)."""
 from __future__ import annotations
 
-from benchmarks.common import emit, run_fl
-from repro.core.obcsaa import OBCSAAConfig
+from benchmarks.common import acc_summary, emit, run_fl_sweep
 from repro.core import comm_stats
+from repro.core.obcsaa import OBCSAAConfig
 
 MEASURES = [256, 512, 1024, 2048]
 ROUNDS = 120
+SEEDS = (0, 1, 2)
 
 
 def main(rounds=ROUNDS):
     rows = []
     for s in MEASURES:
         ob = OBCSAAConfig(chunk=4096, measure=s, topk=80, biht_iters=25)
-        r = run_fl("obcsaa", rounds=rounds, obcsaa=ob)
+        r = run_fl_sweep("obcsaa", rounds=rounds, obcsaa=ob, seeds=SEEDS)
         st = comm_stats(ob, 50890)
         rows.append((f"fig2/obcsaa_S{s}x13", r["us_per_round"],
-                     f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f};"
+                     f"{acc_summary(r)};"
                      f"latency_frac={st['latency_fraction']:.3f}"))
     emit(rows)
     return rows

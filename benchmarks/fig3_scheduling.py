@@ -1,12 +1,17 @@
 """Paper Fig. 3: enumeration vs ADMM joint optimization under different U.
-Also times the solvers (O(2^U) vs O(U)) — the paper's complexity claim."""
+Also times the solvers (O(2^U) vs O(U)) — the paper's complexity claim.
+
+The enum/admm FL rows run the host reference loop (enum is not
+jittable); the ``fl_admm_batched`` row is the same workload on the scan
+engine with Algorithm 2 inlined per round and seeds as batched arms
+(DESIGN.md §11)."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from benchmarks.common import emit, run_fl
+from benchmarks.common import acc_summary, emit, run_fl, run_fl_sweep
 from repro.core.error_floor import AnalysisConstants
 from repro.core.obcsaa import OBCSAAConfig
 from repro.sched import Problem, admm_solve, enumerate_solve
@@ -52,6 +57,11 @@ def main(rounds=ROUNDS):
                    obcsaa=ob)
         rows.append((f"fig3/fl_{sched}_U{U}", r["us_per_round"],
                      f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f}"))
+    ob = OBCSAAConfig(chunk=4096, measure=1024, topk=80, biht_iters=25)
+    r = run_fl_sweep("obcsaa", rounds=rounds, U=10, K=1000,
+                     scheduler="admm_batched", obcsaa=ob, seeds=(0, 1, 2))
+    rows.append(("fig3/fl_admm_batched_U10", r["us_per_round"],
+                 acc_summary(r)))
     emit(rows)
     return rows
 

@@ -1,20 +1,25 @@
-"""Paper Fig. 4: impact of samples-per-worker K̄ (performance saturates)."""
+"""Paper Fig. 4: impact of samples-per-worker K̄ (performance saturates).
+
+K̄ fixes the worker-data shapes (compile-static): one engine build per K̄,
+seeds vmapped as batched arms inside each build (DESIGN.md §11)."""
 from __future__ import annotations
 
-from benchmarks.common import emit, run_fl
+from benchmarks.common import acc_summary, emit, run_fl_sweep
 from repro.core.obcsaa import OBCSAAConfig
 
 KBARS = [300, 1000, 3000]
 ROUNDS = 100
+SEEDS = (0, 1, 2)
 
 
 def main(rounds=ROUNDS):
     rows = []
     for K in KBARS:
         ob = OBCSAAConfig(chunk=4096, measure=1024, topk=80, biht_iters=25)
-        r = run_fl("obcsaa", rounds=rounds, K=K, obcsaa=ob)
+        r = run_fl_sweep("obcsaa", rounds=rounds, K=K, obcsaa=ob,
+                         seeds=SEEDS)
         rows.append((f"fig4/obcsaa_K{K}", r["us_per_round"],
-                     f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f}"))
+                     acc_summary(r)))
     emit(rows)
     return rows
 

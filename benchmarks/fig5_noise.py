@@ -1,23 +1,37 @@
-"""Paper Fig. 5: impact of AWGN variance σ² (SNR sweep)."""
+"""Paper Fig. 5: impact of AWGN variance σ² (SNR sweep).
+
+σ² is a DYNAMIC engine arm axis (Arms.noise_var): the whole SNR grid —
+noise levels × seeds — runs as ONE scan×vmap program instead of a
+fig-script loop (DESIGN.md §11)."""
 from __future__ import annotations
 
-from benchmarks.common import emit, run_fl
+import math
+
+import numpy as np
+
+from benchmarks.common import emit, run_fl_sweep
 from repro.core.obcsaa import OBCSAAConfig
 
 NOISE_VARS = [1e-6, 1e-4, 1e-2, 1.0]
 ROUNDS = 100
+SEEDS = (0, 1, 2)
 
 
 def main(rounds=ROUNDS):
+    ob = OBCSAAConfig(chunk=4096, measure=1024, topk=80, biht_iters=25)
+    # full grid in one engine call: arms = noise levels × seeds
+    noise = [nv for nv in NOISE_VARS for _ in SEEDS]
+    seeds = list(SEEDS) * len(NOISE_VARS)
+    r = run_fl_sweep("obcsaa", rounds=rounds, obcsaa=ob, seeds=seeds,
+                     noise_var=noise)
+    acc = r["final_acc"].reshape(len(NOISE_VARS), len(SEEDS))
+    loss = r["final_loss"].reshape(len(NOISE_VARS), len(SEEDS))
     rows = []
-    for nv in NOISE_VARS:
-        ob = OBCSAAConfig(chunk=4096, measure=1024, topk=80, biht_iters=25,
-                          noise_var=nv)
-        r = run_fl("obcsaa", rounds=rounds, obcsaa=ob)
-        snr_db = 10 * __import__("math").log10(10.0 / nv)
+    for i, nv in enumerate(NOISE_VARS):
+        snr_db = 10 * math.log10(10.0 / nv)
         rows.append((f"fig5/obcsaa_noise{nv:g}", r["us_per_round"],
-                     f"acc={r['final_acc']:.4f};loss={r['final_loss']:.4f};"
-                     f"snr={snr_db:.0f}dB"))
+                     f"acc={np.mean(acc[i]):.4f};loss={np.mean(loss[i]):.4f};"
+                     f"arms={len(SEEDS)};snr={snr_db:.0f}dB"))
     emit(rows)
     return rows
 

@@ -18,14 +18,15 @@ def main() -> None:
                     help="paper-scale round counts (slow on CPU)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig1..fig5,kernels,"
-                         "decoders,sched,ablations,roofline")
+                         "decoders,sched,engine,ablations,roofline")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
     rounds = 300 if args.full else 60
 
-    from benchmarks import (ablations, decoders_bench, fig1_sparsification,
-                            fig2_dimension, fig3_scheduling, fig4_samples,
-                            fig5_noise, kernels_bench, roofline, sched_bench)
+    from benchmarks import (ablations, decoders_bench, engine_bench,
+                            fig1_sparsification, fig2_dimension,
+                            fig3_scheduling, fig4_samples, fig5_noise,
+                            kernels_bench, roofline, sched_bench)
 
     from benchmarks.common import cached_suite
 
@@ -38,13 +39,19 @@ def main() -> None:
         "kernels": kernels_bench.main,
         "decoders": decoders_bench.main,
         "sched": sched_bench.main,
+        "engine": engine_bench.main,
         "ablations": lambda: ablations.main(rounds=max(40, rounds // 2)),
         "roofline": roofline.main,   # cheap, always fresh (reads dryrun/)
     }
-    # kernels + sched + roofline always run fresh: they are the CI smoke
-    # steps and must exercise real code, not replay
+    # kernels + sched + engine + roofline always run fresh: they are the
+    # CI smoke steps and must exercise real code, not replay
     # experiments/bench_cache.json
-    fresh = {"kernels", "sched", "roofline"}
+    fresh = {"kernels", "sched", "engine", "roofline"}
+    # fig/ablation suites moved to engine arms sweeps (v2): the v1 cache
+    # rows were produced by the pre-engine loop AND its half-normal
+    # channel draw — keys are bumped so a full run regenerates them
+    vkey = {"fig1": 2, "fig2": 2, "fig3": 2, "fig4": 2, "fig5": 2,
+            "ablations": 2}
     print("name,us_per_call,derived", flush=True)
     for name, fn in suites.items():
         if only and name not in only:
@@ -53,7 +60,9 @@ def main() -> None:
             if name in fresh:
                 fn()
             else:
-                cached_suite(f"{name}:r{rounds}", fn)
+                key = f"{name}:v{vkey[name]}:r{rounds}" if name in vkey \
+                    else f"{name}:r{rounds}"
+                cached_suite(key, fn)
         except Exception as e:  # keep the harness running
             print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}",
                   file=sys.stdout, flush=True)

@@ -29,7 +29,11 @@ def main():
     ap.add_argument("--agg", default="obcsaa",
                     choices=["obcsaa", "perfect", "topk_aa"])
     ap.add_argument("--scheduler", default="all",
-                    choices=["all", "enum", "admm", "greedy"])
+                    choices=["all", "enum", "admm", "greedy",
+                             "admm_batched", "greedy_batched"],
+                    help="batched solvers run fused inside the scan "
+                         "engine; enum/admm/greedy use the host "
+                         "reference loop (DESIGN.md §11)")
     ap.add_argument("--kappa", type=int, default=80,
                     help="top-κ per 4096-chunk (80x13 ≈ paper κ=1000)")
     ap.add_argument("--measure", type=int, default=1024)

@@ -1,9 +1,16 @@
 """Wireless MAC model (paper §II-B.4).
 
-Block Rayleigh fading: h_{i,t} drawn per (worker, round) from N(0,1) as in
-the paper's §V simulation setup; AWGN z_t ~ N(0, σ²I) added at the PS. The
+Block Rayleigh fading: h_{i,t} = |g_{i,t}| with g ~ CN(0, 1) per (worker,
+round) — the paper's §V setup; AWGN z_t ~ N(0, σ²I) added at the PS. The
 superposition property of the MAC is the arithmetic sum — in the distributed
 runtime this sum IS the psum over the worker mesh axes.
+
+This module is the single owner of the fade draw (``draw_fades``): the FL
+engine (DESIGN.md §11) and the fleet scenario generator
+(``sched/scenario.py``) both step the same first-order Gauss-Markov
+recursion g_t = ρ g_{t−1} + √(1−ρ²) w_t, w ~ CN(0, 1), whose stationary
+marginal is CN(0, 1) — Rayleigh magnitudes with lag-ℓ autocorrelation ρ^ℓ;
+ρ = 0 recovers the paper's i.i.d. per-round redraw.
 
 CSI is known at both ends (paper footnote 3); channels are near-zero
 clamped so the channel-inversion power control (eq. 10) stays bounded, which
@@ -19,13 +26,53 @@ import jax.numpy as jnp
 H_MIN = 1e-3  # clamp |h| to keep 1/h bounded (worker would be unscheduled)
 
 
-def draw_channels(key, n_workers: int, clamp: bool = True) -> jnp.ndarray:
-    """|h_{i,t}| for one round. Paper §V: h ~ N(0,1) (Rayleigh magnitude)."""
-    h = jax.random.normal(key, (n_workers,))
-    h = jnp.abs(h)
+def draw_cn(key, shape) -> jnp.ndarray:
+    """One draw of w ~ CN(0, 1): unit-variance circularly-symmetric
+    complex Gaussian (E|w|² = 1), the Rayleigh-magnitude fade innovation."""
+    re, im = jax.random.split(key)
+    return (jax.random.normal(re, shape)
+            + 1j * jax.random.normal(im, shape)) / jnp.sqrt(2.0)
+
+
+def gauss_markov_step(g, key, rho) -> jnp.ndarray:
+    """g_t = ρ g_{t−1} + √(1−ρ²) w_t — stationary at CN(0, 1), so the
+    magnitude marginal stays Rayleigh for every ρ ∈ [0, 1)."""
+    rho = jnp.asarray(rho, jnp.float32)
+    innov = jnp.sqrt(jnp.maximum(1.0 - rho ** 2, 0.0))
+    return rho * g + innov * draw_cn(key, jnp.shape(g))
+
+
+def draw_fades(key, shape=None, *, rho=0.0, prev=None,
+               clamp: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One round of block-fading magnitudes (paper §II-B.4, §V).
+
+    Returns ``(|h| float32, g complex64)``: the clamped channel magnitudes
+    and the complex fade state to carry into the next round. ``prev=None``
+    draws the stationary initial state g ~ CN(0, 1) (supply ``shape``);
+    otherwise g steps the Gauss-Markov recursion from ``prev`` (ρ = 0 is
+    the paper's i.i.d. block-fading redraw)."""
+    if prev is None:
+        g = draw_cn(key, shape)
+    else:
+        g = gauss_markov_step(prev, key, rho)
+    g = g.astype(jnp.complex64)
+    h = jnp.abs(g).astype(jnp.float32)
     if clamp:
         h = jnp.maximum(h, H_MIN)
-    return h
+    return h, g
+
+
+def rayleigh_cdf(x) -> jnp.ndarray:
+    """F(x) = 1 − exp(−x²) for |CN(0, 1)| — the KS-test reference for the
+    fade marginal (tests/test_engine.py)."""
+    x = jnp.asarray(x, jnp.float32)
+    return 1.0 - jnp.exp(-x ** 2)
+
+
+def draw_channels(key, n_workers: int, clamp: bool = True) -> jnp.ndarray:
+    """|h_{i,t}| for one round (i.i.d. Rayleigh; ``draw_fades`` shorthand
+    without the carried complex state)."""
+    return draw_fades(key, (n_workers,), clamp=clamp)[0]
 
 
 def draw_noise(key, shape, noise_var: float) -> jnp.ndarray:

@@ -60,6 +60,11 @@ class OBCSAAConfig:
     # full chunk array at production scale. The distributed train step turns
     # this on; the single-host simulation keeps exact sort-based top-k.
     spmd_topk: bool = False
+    # Threshold-bisection budget for the spmd path (selection resolution
+    # max·2^-iters; 40 over-resolves f32 — the engine bench runs 20 with a
+    # selection-parity check, DESIGN.md §11). Applies to compression,
+    # error-feedback splits and the decoder's hard threshold.
+    bisect_iters: int = 40
     use_kernels: bool = False    # Pallas kernels (interpret on CPU)
 
     def phi(self, dtype=jnp.float32):
@@ -86,25 +91,37 @@ class OBCSAAConfig:
                     "iht, iht_warm or iht_fused")
         return DecodeConfig(algorithm=alg, iters=self.biht_iters,
                             tau=self.recon_tau, use_kernels=self.use_kernels,
-                            ht="bisect" if self.spmd_topk else "sort")
+                            ht="bisect" if self.spmd_topk else "sort",
+                            ht_iters=self.bisect_iters)
 
 
 # --- compression core (per worker) ---------------------------------------------
 
-def compress_chunks(cfg: OBCSAAConfig, flat: jnp.ndarray, phi=None):
+def compress_chunks(cfg: OBCSAAConfig, flat: jnp.ndarray, phi=None,
+                    presparsified: bool = False):
     """Per-worker compression C(g) = sign(Φ sparse_κ(g)) (eq. 6-7), chunked.
 
     flat: (D_pad,) with D_pad % chunk == 0, or pre-chunked (n, chunk).
-    Returns (signs (n_chunks, S_c), mags (n_chunks,))."""
+    Returns (signs (n_chunks, S_c), mags (n_chunks,)).
+
+    ``presparsified=True`` asserts the input is already the top-κ sparse
+    vector and skips the selection — the engine's error-feedback path
+    computes sparse_κ once for the residual split and feeds it straight
+    here (DESIGN.md §11), instead of thresholding the same array twice."""
     phi = cfg.phi(flat.dtype) if phi is None else phi
     gc = flat if flat.ndim == 2 else flat.reshape(-1, cfg.chunk)
     if cfg.use_kernels:
         from repro.kernels import ops as kops
-        sparse, _ = kops.topk_select(gc, cfg.topk)
+        sparse = gc if presparsified else kops.topk_select(gc, cfg.topk)[0]
         signs = kops.cs_project_sign(phi, sparse)
     else:
-        tk = topk_sparsify_bisect if cfg.spmd_topk else topk_sparsify
-        sparse, _ = tk(gc, cfg.topk)
+        if presparsified:
+            sparse = gc
+        elif cfg.spmd_topk:
+            sparse, _ = topk_sparsify_bisect(gc, cfg.topk,
+                                             iters=cfg.bisect_iters)
+        else:
+            sparse, _ = topk_sparsify(gc, cfg.topk)
         signs = sign_pm1(jnp.einsum("sd,nd->ns", phi, sparse))
     mags = jnp.linalg.norm(sparse, axis=-1)
     return signs, mags
@@ -135,23 +152,30 @@ def reconstruct_chunks(cfg: OBCSAAConfig, y: jnp.ndarray,
 
 def simulate_round(cfg: OBCSAAConfig, grads_flat: jnp.ndarray,
                    k_weights: jnp.ndarray, beta: jnp.ndarray, b_t,
-                   h: jnp.ndarray, key,
-                   decode_x0=None) -> Tuple[jnp.ndarray, dict]:
+                   h: jnp.ndarray, key, decode_x0=None, noise_var=None,
+                   presparsified: bool = False) -> Tuple[jnp.ndarray, dict]:
     """grads_flat: (U, D). Returns (g_hat (D,), diagnostics).
 
     Implements eq. (6)-(14) with perfect channel inversion: the received
     aggregate is Σ_i K_i b_t β_i C(g_i) + z (eq. 12). ``decode_x0`` warm-
     starts the decoder (eq. 43) with the previous round's raw estimate;
     ``diag["decode_xhat"]`` carries this round's raw estimate back out so
-    the FL loop can thread the state (DESIGN.md §9)."""
+    the FL loop can thread the state (DESIGN.md §9). ``noise_var``
+    optionally overrides ``cfg.noise_var`` with a traced value — the FL
+    engine's SNR arms axis (DESIGN.md §11) sweeps it without retracing.
+    ``presparsified=True`` marks ``grads_flat`` as already top-κ sparse
+    per chunk (the engine's fused EF path; see ``compress_chunks``)."""
     U, D = grads_flat.shape
     pad = (-D) % cfg.chunk
     gpad = jnp.pad(grads_flat, ((0, 0), (0, pad)))
     phi = cfg.phi()
-    signs, mags = jax.vmap(lambda g: compress_chunks(cfg, g, phi))(gpad)
+    signs, mags = jax.vmap(
+        lambda g: compress_chunks(cfg, g, phi,
+                                  presparsified=presparsified))(gpad)
     w = k_weights * beta * b_t                      # (U,)
     y = jnp.einsum("u,ucs->cs", w.astype(signs.dtype), signs)
-    noise = chan.draw_noise(key, y.shape, cfg.noise_var)
+    nv = cfg.noise_var if noise_var is None else noise_var
+    noise = chan.draw_noise(key, y.shape, nv)
     y = y + noise                                   # eq. (12)
     denom = jnp.maximum(jnp.sum(k_weights * beta) * b_t, 1e-12)
     y = y / denom                                   # eq. (13)

@@ -12,13 +12,18 @@ import jax.numpy as jnp
 
 
 def topk_sparsify(g: jnp.ndarray, k: int):
-    """Dense top-k over the last axis. Returns (sparse_g, mask)."""
+    """Dense top-k over the last axis. Returns (sparse_g, mask).
+
+    Exactly k entries survive per row: the mask is scattered from
+    ``lax.top_k``'s indices, which break exact-magnitude ties by value
+    order then lowest index (measure-zero for float gradients). The
+    scatter replaces the old threshold + cumsum tie-break — XLA CPU fused
+    that cumsum into an O(chunk²) reduce-window, ~40× slower than the
+    top_k itself (DESIGN.md §11 perf note)."""
     absg = jnp.abs(g)
-    kth = jax.lax.top_k(absg, k)[0][..., -1]
-    mask = absg >= kth[..., None]
-    # tie-break: if >k entries equal the kth value, keep exactly k via cumsum
-    over = jnp.cumsum(mask, axis=-1) <= k
-    mask = mask & over
+    _, idx = jax.lax.top_k(absg, k)
+    mask = jnp.zeros(g.shape, bool)
+    mask = jnp.put_along_axis(mask, idx, True, axis=-1, inplace=False)
     return g * mask, mask
 
 

@@ -37,20 +37,25 @@ from repro.kernels.ref import sign_pm1
 
 
 def hard_threshold(x: jnp.ndarray, k: int) -> jnp.ndarray:
-    """η_κ: keep the k largest-|.| entries along the last axis (eq. 6)."""
+    """η_κ: keep the k largest-|.| entries along the last axis (eq. 6).
+    Mask scattered from ``lax.top_k`` indices — exactly k survivors, ties
+    broken by value order then lowest index (see
+    ``core.sparsify.topk_sparsify`` for the cumsum-fusion perf note)."""
     absx = jnp.abs(x)
-    kth = jax.lax.top_k(absx, k)[0][..., -1:]
-    mask = absx >= kth
-    over = jnp.cumsum(mask, axis=-1) <= k
-    return x * (mask & over)
+    _, idx = jax.lax.top_k(absx, k)
+    mask = jnp.zeros(x.shape, bool)
+    mask = jnp.put_along_axis(mask, idx, True, axis=-1, inplace=False)
+    return x * mask
 
 
-def hard_threshold_bisect(x: jnp.ndarray, k: int) -> jnp.ndarray:
+def hard_threshold_bisect(x: jnp.ndarray, k: int,
+                          iters: int = 40) -> jnp.ndarray:
     """η_κ via magnitude-threshold bisection — the SPMD-partitionable
-    variant (``jax.lax.top_k`` lowers to a sort GSPMD cannot shard)."""
+    variant (``jax.lax.top_k`` lowers to a sort GSPMD cannot shard).
+    ``iters`` is the threshold resolution budget (max·2^-iters)."""
     from repro.core.sparsify import topk_sparsify_bisect  # lazy: decode
     # never imports repro.core at module scope (core imports decode)
-    return topk_sparsify_bisect(x, k)[0]
+    return topk_sparsify_bisect(x, k, iters=iters)[0]
 
 
 def iht(y: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int = 10,

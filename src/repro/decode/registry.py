@@ -54,6 +54,7 @@ class DecodeConfig:
     tau: float = 1.0
     use_kernels: bool = False     # fused-Pallas hot loop where supported
     ht: str = "sort"              # sort | bisect (SPMD-friendly threshold)
+    ht_iters: int = 40            # bisect resolution budget (max·2^-iters)
     shard_axes: Tuple = ("model", None)   # chunk-dim mesh constraint
 
 
@@ -89,7 +90,8 @@ def list_decoders():
 
 def _ht_fn(cfg: DecodeConfig):
     if cfg.ht == "bisect":
-        return hard_threshold_bisect
+        import functools
+        return functools.partial(hard_threshold_bisect, iters=cfg.ht_iters)
     if cfg.ht == "sort":
         return hard_threshold
     raise ValueError(f"unknown hard-threshold {cfg.ht!r} (sort|bisect)")

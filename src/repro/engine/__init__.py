@@ -1,0 +1,28 @@
+"""repro.engine — device-resident multi-round FL experiment engine
+(DESIGN.md §11).
+
+The paper's full round (eq. 3 local gradients → eq. 6-7 compress → eq. 10
+power scaling → eq. 13 MAC+AWGN → eq. 43 decode → eq. 14 update) as a
+single jitted ``lax.scan`` over rounds, chunked at the eval cadence, with
+an ``Arms`` vmap axis batching experiment arms (seeds × SNR × P^Max × lr)
+into one compiled program. ``fl/rounds.py:FederatedTrainer`` is the thin
+host wrapper; benchmarks and sweeps call ``run_sweep`` directly.
+
+Layering: imports ``repro.core`` (compression/channel/analysis),
+``repro.sched`` (jittable P2 solvers), ``repro.decode`` (via obcsaa) and
+``repro.optim`` — never ``repro.fl``, which sits above it.
+"""
+from repro.engine.config import ENGINE_SCHEDULERS, FLConfig
+from repro.engine.core import (EngineFns, build_engine, perfect_aggregate,
+                               stacked_grads, topk_aa_aggregate)
+from repro.engine.runner import (EngineRun, chunk_spans, eval_points,
+                                 run_sweep)
+from repro.engine.state import (Arms, EngineState, RoundStats, make_arms,
+                                n_arms, single_arm)
+
+__all__ = [
+    "Arms", "ENGINE_SCHEDULERS", "EngineFns", "EngineRun", "EngineState",
+    "FLConfig", "RoundStats", "build_engine", "chunk_spans", "eval_points",
+    "make_arms", "n_arms", "perfect_aggregate", "run_sweep", "single_arm",
+    "stacked_grads", "topk_aa_aggregate",
+]

@@ -1,0 +1,71 @@
+"""FL experiment configuration — consumed by the device-resident engine
+(DESIGN.md §11) and by the host reference loop in ``repro.fl.rounds``.
+
+``FLConfig`` lives here (not in ``repro.fl``) because the engine is the
+layer below the trainer: ``fl/rounds.py:FederatedTrainer`` is a thin host
+wrapper over ``repro.engine`` and re-exports this class unchanged, so
+existing ``from repro.fl import FLConfig`` call sites keep working.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.error_floor import AnalysisConstants
+from repro.core.obcsaa import OBCSAAConfig
+from repro.sched.config import SchedConfig
+
+# Scheduler strings the engine can inline in its jitted round body
+# (DESIGN.md §11). "admm_batched" maps onto the scan-safe
+# ``admm_solve_batched_jit`` inside the engine; the host-compacted fleet
+# solver keeps the name for registry callers. Everything else (enum and
+# the NumPy reference oracles) runs through the host reference path.
+ENGINE_SCHEDULERS = ("all", "greedy_batched", "admm_batched",
+                    "admm_batched_jit")
+
+
+@dataclass
+class FLConfig:
+    aggregator: str = "obcsaa"       # perfect | topk_aa | obcsaa
+    # P2 solver, dispatched through the repro.sched registry (DESIGN.md
+    # §10): all | enum | admm | greedy | admm_batched | greedy_batched.
+    # Members of ENGINE_SCHEDULERS run fused inside the engine's scan.
+    scheduler: str = "all"
+    learning_rate: float = 0.1       # paper §V
+    rounds: int = 300
+    eval_every: int = 10
+    seed: int = 0
+    obcsaa: OBCSAAConfig = field(default_factory=OBCSAAConfig)
+    const: AnalysisConstants = field(default_factory=AnalysisConstants)
+    # topk_aa baseline: same κ budget as obcsaa over the FULL vector
+    topk_dense: int = 1000
+    # Beyond-paper: per-worker error feedback (Stich et al., paper ref [37]):
+    # each worker keeps the residual of its top-κ sparsification and adds it
+    # to the next round's gradient before compression.
+    error_feedback: bool = False
+    # Fading temporal correlation ρ of the Gauss-Markov fade recursion
+    # (core/channel.py draw_fades); 0 is the paper's i.i.d. block-fading
+    # per-round redraw, the §V setup.
+    channel_rho: float = 0.0
+    # Execution mode: "scan" = the jitted scan-over-rounds engine
+    # (DESIGN.md §11), "host" = the per-round host reference loop (the
+    # parity oracle; required for non-jittable schedulers like enum),
+    # "auto" = scan when the scheduler supports it.
+    mode: str = "auto"
+    # Solver knobs for the batched P2 schedulers (None -> defaults)
+    sched_cfg: Optional[SchedConfig] = None
+
+    def engine_capable(self) -> bool:
+        """Can every per-round decision run inside one jitted program?"""
+        return (self.aggregator == "perfect"
+                or self.scheduler in ENGINE_SCHEDULERS)
+
+    def resolved_mode(self) -> str:
+        if self.mode == "auto":
+            return "scan" if self.engine_capable() else "host"
+        if self.mode == "scan" and not self.engine_capable():
+            raise ValueError(
+                f"mode='scan' but scheduler {self.scheduler!r} is not "
+                f"jittable (engine schedulers: {ENGINE_SCHEDULERS}); use "
+                "mode='host' or a batched scheduler")
+        return self.mode

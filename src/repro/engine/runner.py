@@ -1,0 +1,160 @@
+"""Chunked scan-over-rounds execution + vmap-over-arms sweeps
+(DESIGN.md §11).
+
+The engine runs rounds as ``lax.scan`` chunks cut at the eval cadence:
+one jitted device call advances ``eval_every`` rounds (carry donated, so
+params/opt/EF/warm-start buffers are reused in place), then the host
+streams metrics (eval_fn, per-round scheduling stats) and launches the
+next chunk. Chunk lengths take at most three distinct values (1,
+``eval_every``, tail), so the jit cache stays bounded.
+
+``run_sweep`` vmaps the same chunk over an ``Arms`` pytree: A experiment
+arms (seeds × SNR × P^Max × lr) advance in ONE compiled program per
+chunk — the fig1–fig5 sweep grids as a single device-resident computation
+instead of sequential fig-script loops.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsify import flatten_pytree
+from repro.engine.core import EngineFns, build_engine
+from repro.engine.state import Arms, make_arms, single_arm
+from repro.optim.optimizers import sgd
+
+
+def _donate():
+    # buffer donation is a no-op (with a warning) on CPU; only ask for it
+    # where the runtime honors it
+    return (0,) if jax.default_backend() != "cpu" else ()
+
+
+def eval_points(rounds: int, eval_every: int) -> List[int]:
+    """Rounds after which the host evaluates — t % eval_every == 0 plus
+    the final round, matching the historical trainer cadence."""
+    pts = sorted({t for t in range(rounds) if t % eval_every == 0}
+                 | {rounds - 1})
+    return pts
+
+
+def chunk_spans(rounds: int, eval_every: Optional[int]) -> List[tuple]:
+    """(t0, n) scan chunks whose boundaries land on the eval points; one
+    full-range chunk when metrics are not streamed."""
+    if not eval_every:
+        return [(0, rounds)]
+    spans, t0 = [], 0
+    for t in eval_points(rounds, eval_every):
+        spans.append((t0, t - t0 + 1))
+        t0 = t + 1
+    return spans
+
+
+class EngineRun:
+    """One built engine + its jitted chunk programs (single arm or
+    vmapped arms — same scan body either way)."""
+
+    def __init__(self, cfg, loss_fn, params, worker_data, k_weights,
+                 eval_fn: Optional[Callable] = None, optimizer=None):
+        self.cfg = cfg
+        self.worker_data = worker_data
+        self.k_weights = jnp.asarray(k_weights, jnp.float32)
+        self.eval_fn = eval_fn
+        self.opt = optimizer or sgd()
+        flat, unflatten = flatten_pytree(params)
+        self.fns: EngineFns = build_engine(cfg, loss_fn, self.opt,
+                                           int(flat.shape[0]),
+                                           int(self.k_weights.shape[0]),
+                                           unflatten)
+        self._params0 = params
+        self._chunk_cache: Dict[tuple, Callable] = {}
+
+    # -- chunk programs ----------------------------------------------------
+
+    def _chunk_fn(self, n: int, vmapped: bool) -> Callable:
+        key = (n, vmapped)
+        if key in self._chunk_cache:
+            return self._chunk_cache[key]
+        full_round = self.fns.full_round
+
+        def chunk(state, arm, worker_data, k_weights, t0):
+            def body(st, t):
+                return full_round(st, arm, worker_data, k_weights, t)
+
+            return jax.lax.scan(body, state, t0 + jnp.arange(n))
+
+        fn = chunk
+        if vmapped:
+            fn = jax.vmap(chunk, in_axes=(0, 0, None, None, None))
+        fn = jax.jit(fn, donate_argnums=_donate())
+        self._chunk_cache[key] = fn
+        return fn
+
+    # -- single-arm run (the trainer's scan path) --------------------------
+
+    def init(self, arm: Optional[Arms] = None):
+        arm = arm if arm is not None else single_arm(self.cfg)
+        return self.fns.init_state(self._params0, arm), arm
+
+    def run_chunk(self, state, arm, t0: int, n: int, vmapped=False):
+        """Advance ``n`` rounds from ``t0`` in one device call. Returns
+        (state', RoundStats with (n,)-leading stat arrays)."""
+        fn = self._chunk_fn(n, vmapped)
+        return fn(state, arm, self.worker_data, self.k_weights,
+                  jnp.int32(t0))
+
+    # -- vmapped arms sweep ------------------------------------------------
+
+    def run_sweep(self, arms: Arms, rounds: Optional[int] = None,
+                  eval_every: Optional[int] = None) -> Dict:
+        """Run A arms for ``rounds`` rounds as vmapped scan chunks.
+
+        Returns a dict of host arrays: per-round scheduling trajectories
+        ``n_scheduled``/``b_t`` with shape (A, rounds) (dense — every
+        round, DESIGN.md §11), eval streams ``eval_rounds``/``loss``/
+        ``accuracy`` when an eval_fn is present, and the final per-arm
+        ``params`` (stacked pytree) + ``state``."""
+        cfg = self.cfg
+        rounds = rounds or cfg.rounds
+        eval_every = eval_every if eval_every is not None \
+            else (cfg.eval_every if self.eval_fn else None)
+        A = int(arms.noise_var.shape[0])
+        state = jax.vmap(lambda a: self.fns.init_state(self._params0, a)
+                         )(arms)
+        eval_v = jax.vmap(self.eval_fn) if self.eval_fn else None
+        n_sched, b_ts, losses, accs, eval_ts = [], [], [], [], []
+        for t0, n in chunk_spans(rounds, eval_every):
+            state, stats = self.run_chunk(state, arms, t0, n, vmapped=True)
+            # stats leaves: (A, n) -> per-round trajectory slabs
+            n_sched.append(np.asarray(stats.n_scheduled))
+            b_ts.append(np.asarray(stats.b_t))
+            if eval_v is not None:
+                loss, acc = eval_v(state.params)
+                losses.append(np.asarray(loss))
+                accs.append(np.asarray(acc))
+                eval_ts.append(t0 + n - 1)
+        out = {"n_scheduled": np.concatenate(n_sched, axis=1),
+               "b_t": np.concatenate(b_ts, axis=1),
+               "state": state, "params": state.params, "arms": arms}
+        assert out["n_scheduled"].shape == (A, rounds)
+        if eval_v is not None:
+            out["eval_rounds"] = np.asarray(eval_ts)
+            out["loss"] = np.stack(losses, axis=1)       # (A, n_evals)
+            out["accuracy"] = np.stack(accs, axis=1)
+        return out
+
+
+def run_sweep(cfg, loss_fn, params, worker_data, k_weights, *,
+              arms: Optional[Arms] = None, eval_fn=None, optimizer=None,
+              rounds: Optional[int] = None,
+              eval_every: Optional[int] = None, **arm_axes) -> Dict:
+    """One-call sweep: build the engine, broadcast ``arm_axes`` (seeds /
+    noise_var / p_max / lr sequences) into an ``Arms`` pytree and run the
+    scan × vmap grid. See ``EngineRun.run_sweep`` for the result dict."""
+    run = EngineRun(cfg, loss_fn, params, worker_data, k_weights,
+                    eval_fn=eval_fn, optimizer=optimizer)
+    arms = arms if arms is not None else make_arms(cfg, **arm_axes)
+    return run.run_sweep(arms, rounds=rounds, eval_every=eval_every)

@@ -1,0 +1,96 @@
+"""Engine carry and arms pytrees (DESIGN.md §11).
+
+``EngineState`` is the ``lax.scan`` carry for one experiment arm — model
+parameters, optimizer state, the complex Gauss-Markov fade state, the
+previous schedule (warm-start reset mask), the decoder warm-start chunks
+and the error-feedback residuals. Leaves that a static ``FLConfig`` turns
+off are ``None`` (an empty pytree node), so the carry structure is fixed
+per configuration and the same state threads through ``jit``/``scan``/
+``vmap`` unchanged.
+
+``Arms`` holds the DYNAMIC per-arm sweep axes — PRNG key, noise variance
+σ², power budget P^Max, learning rate α — the quantities an experiment
+grid varies without retracing. Static axes (κ, S, aggregator, scheduler)
+live in ``FLConfig``; a grid over those is a loop over engine builds,
+each of which still vmaps its dynamic arms in one compiled program.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class EngineState(NamedTuple):
+    """Per-arm scan carry (donated across chunk calls)."""
+    params: Any                        # model pytree
+    opt_state: Any                     # optimizer state pytree
+    fade: jnp.ndarray                  # (U,) complex64 Gauss-Markov state
+    prev_beta: jnp.ndarray             # (U,) f32; -1 before round 0
+    decode_x0: Optional[jnp.ndarray]   # (n_chunks, D_c) warm start | None
+    residual: Optional[jnp.ndarray]    # (U, D) EF residuals | None
+
+
+class RoundStats(NamedTuple):
+    """Per-round scheduling stats, emitted EVERY round as scan outputs —
+    the dense trajectory the eval-gated ``RoundLog`` used to drop."""
+    n_scheduled: jnp.ndarray           # i32: Σβ_t
+    b_t: jnp.ndarray                   # f32: power scaling factor
+
+
+class Arms(NamedTuple):
+    """Dynamic experiment-arm axes; leaves are scalars for a single arm or
+    (A, ...)-stacked for a vmapped sweep."""
+    key: jnp.ndarray                   # per-arm base PRNG key
+    noise_var: jnp.ndarray             # σ² (mW)
+    p_max: jnp.ndarray                 # P^Max (mW)
+    lr: jnp.ndarray                    # learning rate α
+
+
+def single_arm(cfg) -> Arms:
+    """The one-arm ``Arms`` implied by an ``FLConfig`` (seed + obcsaa
+    noise/power + learning rate)."""
+    return Arms(key=jax.random.PRNGKey(cfg.seed),
+                noise_var=jnp.float32(cfg.obcsaa.noise_var),
+                p_max=jnp.float32(cfg.obcsaa.p_max),
+                lr=jnp.float32(cfg.learning_rate))
+
+
+def make_arms(cfg, *, seeds=None, noise_var=None, p_max=None,
+              lr=None) -> Arms:
+    """Broadcast sweep axes to a common arm count A.
+
+    Every argument accepts a scalar or a sequence; unset axes default to
+    the ``FLConfig`` values. At least one axis must be a sequence (that
+    fixes A). Seeds map to per-arm PRNG keys."""
+    axes = {"seeds": seeds, "noise_var": noise_var, "p_max": p_max,
+            "lr": lr}
+    lengths = [len(v) for v in axes.values()
+               if v is not None and np.ndim(v) > 0]
+    if not lengths:
+        raise ValueError("make_arms needs at least one sequence axis "
+                         "(seeds / noise_var / p_max / lr)")
+    A = max(lengths)
+    for name, v in axes.items():
+        if v is not None and np.ndim(v) > 0 and len(v) not in (1, A):
+            raise ValueError(f"arms axis {name!r} has length {len(v)}, "
+                             f"expected 1 or {A}")
+
+    def bcast(v, default):
+        v = default if v is None else v
+        return jnp.broadcast_to(jnp.asarray(v, jnp.float32).reshape(-1),
+                                (A,))
+
+    s = seeds if seeds is not None else cfg.seed
+    s = jnp.broadcast_to(jnp.asarray(s, jnp.uint32), (A,))
+    keys = jax.vmap(jax.random.PRNGKey)(s)
+    return Arms(key=keys,
+                noise_var=bcast(noise_var, cfg.obcsaa.noise_var),
+                p_max=bcast(p_max, cfg.obcsaa.p_max),
+                lr=bcast(lr, cfg.learning_rate))
+
+
+def n_arms(arms: Arms) -> int:
+    return int(arms.noise_var.shape[0]) if arms.noise_var.ndim else 1

@@ -1,7 +1,8 @@
-from repro.fl.rounds import FederatedTrainer, FLConfig, RoundLog
+from repro.fl.rounds import (FederatedTrainer, FLConfig, RoundLog,
+                             SchedLog)
 from repro.fl.server import receive_and_reconstruct, schedule_round
 from repro.fl.worker import local_gradient, stacked_local_gradients, transmit
 
-__all__ = ["FederatedTrainer", "FLConfig", "RoundLog",
+__all__ = ["FederatedTrainer", "FLConfig", "RoundLog", "SchedLog",
            "receive_and_reconstruct", "schedule_round", "local_gradient",
            "stacked_local_gradients", "transmit"]

@@ -1,16 +1,27 @@
-"""FL round orchestration: the paper's §V experiment engine.
+"""FL round orchestration — thin host wrapper over ``repro.engine``
+(DESIGN.md §11).
 
 Each round t:
-  1. PS draws this round's block-fading channels h_{i,t} (known CSI).
-  2. PS solves P2 via the repro.sched registry (scheduling method:
-     all | enum | admm | greedy | admm_batched | greedy_batched,
-     DESIGN.md §10) -> β_t, b_t.
+  1. PS draws this round's block-fading channels h_{i,t} (known CSI,
+     Rayleigh via core/channel.py's Gauss-Markov fade state).
+  2. PS solves P2 (scheduling method: all | enum | admm | greedy |
+     admm_batched | greedy_batched, DESIGN.md §10) -> β_t, b_t.
   3. Scheduled workers compute local full-batch gradients (eq. 3), compress
      (eq. 6-7), power-scale (eq. 10) and transmit simultaneously.
   4. The MAC superimposes; PS adds AWGN, post-processes (eq. 13), decodes
-     (eq. 43, via the repro.decode registry — warm-start state is carried
-     here across rounds, DESIGN.md §9) and broadcasts ĝ_t; everyone
-     updates w (eq. 14).
+     (eq. 43, via the repro.decode registry — warm-start state rides the
+     engine carry, DESIGN.md §9) and broadcasts ĝ_t; everyone updates w
+     (eq. 14).
+
+Two execution modes over ONE round body (``repro.engine.core``):
+
+- ``scan``: the device-resident engine — rounds advance as jitted
+  ``lax.scan`` chunks cut at the eval cadence, state donated between
+  chunks; requires a jittable scheduler (``ENGINE_SCHEDULERS``).
+- ``host``: the per-round reference loop — fade draw, registry scheduling
+  (this is where the non-jittable ``enum``/NumPy oracles run), then the
+  same jitted round body. The parity oracle: scan ≡ host bitwise at
+  float32 (tests/test_engine.py).
 
 Aggregators:
   perfect  — error-free weighted mean (paper's "perfect aggregation" bench)
@@ -20,45 +31,22 @@ Aggregators:
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import channel as chan
-from repro.core.error_floor import AnalysisConstants
-from repro.core.obcsaa import OBCSAAConfig, simulate_round
-from repro.core.sparsify import flatten_pytree, topk_sparsify
+from repro.engine import ENGINE_SCHEDULERS, EngineRun, FLConfig  # noqa: F401
+from repro.engine.runner import chunk_spans
 from repro.fl.server import schedule_round
-from repro.fl.worker import stacked_local_gradients
-from repro.optim.optimizers import Optimizer, sgd
-
-
-@dataclass
-class FLConfig:
-    aggregator: str = "obcsaa"       # perfect | topk_aa | obcsaa
-    # P2 solver, dispatched through the repro.sched registry (DESIGN.md
-    # §10): all | enum | admm | greedy | admm_batched | greedy_batched
-    scheduler: str = "all"
-    learning_rate: float = 0.1       # paper §V
-    rounds: int = 300
-    eval_every: int = 10
-    seed: int = 0
-    obcsaa: OBCSAAConfig = field(default_factory=OBCSAAConfig)
-    const: AnalysisConstants = field(default_factory=AnalysisConstants)
-    # topk_aa baseline: same κ budget as obcsaa over the FULL vector
-    topk_dense: int = 1000
-    # Beyond-paper: per-worker error feedback (Stich et al., paper ref [37]):
-    # each worker keeps the residual of its top-κ sparsification and adds it
-    # to the next round's gradient before compression.
-    error_feedback: bool = False
+from repro.optim.optimizers import Optimizer
 
 
 @dataclass
 class RoundLog:
+    """Eval-cadence metrics (loss/accuracy stream)."""
     round: int
     loss: float
     accuracy: float
@@ -66,25 +54,19 @@ class RoundLog:
     b_t: float
 
 
-def _perfect_aggregate(grads_flat, k_weights, beta):
-    w = (k_weights * beta)[:, None]
-    return jnp.sum(grads_flat * w, axis=0) / jnp.maximum(
-        jnp.sum(k_weights * beta), 1e-12)
-
-
-def _topk_aa_aggregate(grads_flat, k_weights, beta, b_t, kappa, noise_var,
-                       key):
-    """Sparsified analog aggregation (no CS, no 1-bit): workers transmit
-    their top-κ gradients directly; AWGN at the PS."""
-    sp, _ = topk_sparsify(grads_flat, kappa)
-    w = (k_weights * beta * b_t)[:, None]
-    y = jnp.sum(sp * w, axis=0)
-    y = y + chan.draw_noise(key, y.shape, noise_var)
-    return y / jnp.maximum(jnp.sum(k_weights * beta) * b_t, 1e-12)
+@dataclass
+class SchedLog:
+    """Dense per-round scheduling stats — emitted EVERY round from the
+    scan carry (no eval-gated holes; DESIGN.md §11)."""
+    round: int
+    n_scheduled: int
+    b_t: float
 
 
 class FederatedTrainer:
-    """Drives FL rounds for any (loss_fn, params) pair + stacked worker data."""
+    """Drives FL rounds for any (loss_fn, params) pair + stacked worker
+    data; delegates the round body to ``repro.engine`` and keeps only
+    orchestration + metrics streaming on the host."""
 
     def __init__(self, cfg: FLConfig, loss_fn: Callable, params,
                  worker_data, k_weights: np.ndarray,
@@ -92,98 +74,107 @@ class FederatedTrainer:
                  optimizer: Optional[Optimizer] = None):
         self.cfg = cfg
         self.loss_fn = loss_fn
-        self.params = params
         self.worker_data = worker_data
         self.k_weights = np.asarray(k_weights, np.float64)
         self.eval_fn = eval_fn
-        self.opt = optimizer or sgd()
-        self.opt_state = self.opt.init(params)
-        flat, self._unflatten = flatten_pytree(params)
-        self.D = int(flat.shape[0])
-        self._rng = np.random.default_rng(cfg.seed)
+        self._mode = cfg.resolved_mode()
+        self._engine = EngineRun(cfg, loss_fn, params, worker_data,
+                                 self.k_weights, eval_fn=eval_fn,
+                                 optimizer=optimizer)
+        self.opt = self._engine.opt
+        self.D = self._engine.fns.D
+        self._state, self._arm = self._engine.init()
         self.logs: List[RoundLog] = []
-        self._grad_fn = jax.jit(functools.partial(stacked_local_gradients,
-                                                  loss_fn))
-        self._agg_fn = jax.jit(self._aggregate)
-        U = len(self.k_weights)
-        # Warm-start decode state (DESIGN.md §9): round t's decoder is
-        # seeded with round t−1's RAW estimate; zeros = cold start. Reset
-        # whenever the schedule changes (the aggregate's support mixture
-        # shifts, so stale state would bias the decode).
-        ob = cfg.obcsaa
-        self._n_chunks = -(-self.D // ob.chunk)
-        self._decode_x0 = (jnp.zeros((self._n_chunks, ob.chunk))
-                           if (cfg.aggregator == "obcsaa" and ob.warm_start)
-                           else None)
-        self._prev_beta = None
-        self._residual = jnp.zeros((U, self.D)) if cfg.error_feedback \
-            else None
-        if cfg.error_feedback:
-            from repro.core.sparsify import topk_sparsify_chunked
-            ob = cfg.obcsaa
-            n_chunks = -(-self.D // ob.chunk)
-            pad = n_chunks * ob.chunk - self.D
+        self.sched_logs: List[SchedLog] = []
+        # host-path programs: the SAME engine round functions, one round
+        # per dispatch (the scan-parity oracle)
+        fns = self._engine.fns
+        self._fade_jit = jax.jit(fns.fade_step)
+        self._round_jit = jax.jit(fns.round_given_schedule)
+        self._sched_jit = (jax.jit(fns.schedule)
+                           if cfg.engine_capable()
+                           and cfg.aggregator != "perfect" else None)
 
-            @jax.jit
-            def ef_split(grads, residual):
-                corrected = grads + residual
-                gp = jnp.pad(corrected, ((0, 0), (0, pad)))
-                sp, _ = jax.vmap(lambda g: topk_sparsify_chunked(
-                    g, ob.topk, ob.chunk))(gp)
-                sp = sp[:, :self.D]
-                return corrected, corrected - sp
+    # -- state passthrough ------------------------------------------------
 
-            self._ef_split = ef_split
+    @property
+    def params(self):
+        return self._state.params
 
-    def _aggregate(self, grads_flat, k_weights, beta, b_t, h, key,
-                   decode_x0=None):
-        cfg = self.cfg
-        if cfg.aggregator == "perfect":
-            return _perfect_aggregate(grads_flat, k_weights, beta), None
-        if cfg.aggregator == "topk_aa":
-            return _topk_aa_aggregate(grads_flat, k_weights, beta, b_t,
-                                      cfg.topk_dense, cfg.obcsaa.noise_var,
-                                      key), None
-        ghat, diag = simulate_round(cfg.obcsaa, grads_flat, k_weights, beta,
-                                    b_t, h, key, decode_x0=decode_x0)
-        # only thread the raw estimate out of the jit when warm-start state
-        # is actually carried — otherwise it is a dead D-sized output
-        return ghat, (diag["decode_xhat"] if cfg.obcsaa.warm_start else None)
+    @property
+    def opt_state(self):
+        return self._state.opt_state
+
+    @property
+    def sched_trajectory(self) -> Dict[str, np.ndarray]:
+        """Dense (rounds,) scheduling trajectories."""
+        return {
+            "round": np.asarray([s.round for s in self.sched_logs]),
+            "n_scheduled": np.asarray([s.n_scheduled
+                                       for s in self.sched_logs]),
+            "b_t": np.asarray([s.b_t for s in self.sched_logs]),
+        }
+
+    # -- host reference path ----------------------------------------------
 
     def run_round(self, t: int) -> Dict:
+        """One host-orchestrated round: device fade draw, scheduling via
+        the registry (NumPy oracles incl. ``enum`` run here), then the
+        engine's jitted round body."""
         cfg = self.cfg
+        arm = self._arm
         U = len(self.k_weights)
-        h = np.abs(self._rng.normal(size=U))
-        h = np.maximum(h, chan.H_MIN)
+        k_t = jax.random.fold_in(arm.key, t)
+        h, fade = self._fade_jit(self._state.fade,
+                                 jax.random.fold_in(k_t, 0))
         if cfg.aggregator == "perfect":
-            beta, b_t = np.ones(U), 1.0
+            beta = jnp.ones((U,), jnp.float32)
+            b_t = jnp.float32(1.0)
+        elif self._sched_jit is not None:
+            beta, b_t = self._sched_jit(h, self._engine.k_weights,
+                                        arm.noise_var, arm.p_max)
         else:
-            beta, b_t = schedule_round(cfg.scheduler, h, self.k_weights,
-                                       cfg.obcsaa, cfg.const, self.D)
-        grads = self._grad_fn(self.params, self.worker_data)     # (U, D)
-        if self._residual is not None:
-            grads, self._residual = self._ef_split(grads, self._residual)
-        if (self._decode_x0 is not None and self._prev_beta is not None
-                and not np.array_equal(beta, self._prev_beta)):
-            # schedule change -> reset warm-start state (DESIGN.md §9)
-            self._decode_x0 = jnp.zeros_like(self._decode_x0)
-        key = jax.random.PRNGKey(cfg.seed * 100003 + t)
-        ghat, xraw = self._agg_fn(grads,
-                                  jnp.asarray(self.k_weights, jnp.float32),
-                                  jnp.asarray(beta, jnp.float32),
-                                  jnp.asarray(b_t, jnp.float32),
-                                  jnp.asarray(h, jnp.float32), key,
-                                  self._decode_x0)
-        if self._decode_x0 is not None:
-            self._decode_x0 = xraw
-        self._prev_beta = np.asarray(beta).copy()
-        g_tree = self._unflatten(ghat[:self.D])
-        self.params, self.opt_state = self.opt.update(
-            g_tree, self.opt_state, self.params, cfg.learning_rate)
-        return {"beta": beta, "b_t": b_t, "h": h}
+            beta_np, bt = schedule_round(
+                cfg.scheduler, np.asarray(h, np.float64), self.k_weights,
+                cfg.obcsaa, cfg.const, self.D, cfg.sched_cfg)
+            beta = jnp.asarray(beta_np, jnp.float32)
+            b_t = jnp.float32(bt)
+        self._state, stats = self._round_jit(
+            self._state, arm, self.worker_data, self._engine.k_weights,
+            jnp.int32(t), h, fade, beta, b_t)
+        self.sched_logs.append(SchedLog(t, int(stats.n_scheduled),
+                                        float(stats.b_t)))
+        return {"beta": np.asarray(beta), "b_t": float(b_t),
+                "h": np.asarray(h)}
+
+    # -- scan engine path -------------------------------------------------
+
+    def _run_scan(self, rounds: int, verbose: bool):
+        cfg = self.cfg
+        ee = cfg.eval_every if self.eval_fn else None
+        for t0, n in chunk_spans(rounds, ee):
+            self._state, stats = self._engine.run_chunk(self._state,
+                                                        self._arm, t0, n)
+            ns = np.asarray(stats.n_scheduled)
+            bt = np.asarray(stats.b_t)
+            self.sched_logs.extend(
+                SchedLog(t0 + i, int(ns[i]), float(bt[i]))
+                for i in range(n))
+            if self.eval_fn:
+                t = t0 + n - 1
+                loss, acc = self.eval_fn(self.params)
+                self.logs.append(RoundLog(t, float(loss), float(acc),
+                                          int(ns[-1]), float(bt[-1])))
+                if verbose:
+                    print(f"round {t:4d} loss={float(loss):.4f} "
+                          f"acc={float(acc):.4f} "
+                          f"sched={int(ns[-1])}/{len(self.k_weights)}")
 
     def run(self, rounds: Optional[int] = None, verbose: bool = False):
         rounds = rounds or self.cfg.rounds
+        if self._mode == "scan":
+            self._run_scan(rounds, verbose)
+            return self.logs
         for t in range(rounds):
             info = self.run_round(t)
             if self.eval_fn and (t % self.cfg.eval_every == 0

@@ -231,6 +231,64 @@ def make_scheduled_round_ctx(mesh, tcfg: TrainConfig, D: int, *,
     return round_ctx
 
 
+def make_scheduled_round_span(mesh, tcfg: TrainConfig, D: int, rounds: int,
+                              *, scenario=None,
+                              method: str = "greedy_batched",
+                              seed: int = 0) -> Dict:
+    """Stacked round contexts for ``make_scan_train_step`` (DESIGN.md §11).
+
+    Where ``make_scheduled_round_ctx`` solves P2 once per round on demand,
+    this solves the WHOLE span in one batched registry call: the
+    (rounds, U) fading trajectory becomes a B = rounds ``BatchedProblem``
+    and the scheduler runs one device pass for every round's β/b_t. The
+    returned dict has (rounds, ...)-leading leaves — the scan xs."""
+    from repro.core.error_floor import AnalysisConstants
+    from repro.sched import BatchedProblem, SchedConfig, schedule
+    from repro.sched.scenario import ScenarioConfig, generate
+
+    U = num_workers(mesh)
+    scn = scenario or ScenarioConfig(rounds=rounds, cells=1, workers=U)
+    assert scn.workers == U and scn.rounds >= rounds, (scn, U, rounds)
+    traj = generate(scn, jax.random.PRNGKey(seed))
+    h = traj[:rounds, 0]                                  # (rounds, U)
+    prob = BatchedProblem.from_arrays(
+        h, 1.0, tcfg.p_max, tcfg.noise_var, D=D, S=tcfg.cs_measure,
+        kappa=tcfg.cs_topk, const=AnalysisConstants())
+    beta, b_t, _ = schedule(prob, method, SchedConfig())
+    keys = jax.vmap(
+        lambda t: jax.random.fold_in(jax.random.PRNGKey(seed * 100003), t)
+    )(jnp.arange(rounds))
+    return {"h": h, "beta": beta.astype(jnp.float32),
+            "b_t": b_t.astype(jnp.float32), "key": keys}
+
+
+def make_scan_train_step(model: Model, tcfg: TrainConfig, mesh,
+                         n_rounds: int) -> Callable:
+    """Multi-round train step: ``lax.scan`` of the per-round step over
+    stacked round contexts (DESIGN.md §11) — one jit dispatch advances
+    ``n_rounds`` rounds of the mesh trainer, with the per-round
+    ``shard_map`` OBCSAA aggregation (or mean) inlined in the scan body.
+
+    Returns ``scan_step(params, opt_state, batch, round_ctxs)`` where
+    ``round_ctxs`` comes from ``make_scheduled_round_span`` (or any dict
+    of (n_rounds, ...)-leading arrays shaped like ``default_round_ctx``).
+    """
+    step = make_train_step(model, tcfg, mesh)
+
+    def scan_step(params, opt_state, batch, round_ctxs):
+        def body(carry, ctx):
+            params, opt_state = carry
+            params, opt_state, metrics = step(params, opt_state, batch,
+                                              ctx)
+            return (params, opt_state), metrics
+
+        (params, opt_state), metrics = jax.lax.scan(
+            body, (params, opt_state), round_ctxs, length=n_rounds)
+        return params, opt_state, metrics
+
+    return scan_step
+
+
 # --- serve steps -------------------------------------------------------------------
 
 def make_prefill_step(model: Model) -> Callable:

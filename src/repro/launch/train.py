@@ -43,6 +43,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--agg", default="obcsaa", choices=["mean", "obcsaa"])
+    ap.add_argument("--scan-rounds", type=int, default=0,
+                    help="fuse N rounds per dispatch via the scan engine "
+                         "(P2 pre-scheduled for the whole span in one "
+                         "batched solver call; DESIGN.md §11)")
     ap.add_argument("--lr", type=float, default=3e-2)
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--cs-chunk", type=int, default=1024)
@@ -62,16 +66,47 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
         opt = steps_lib.make_optimizer(tcfg)
         opt_state = opt.init(params)
-        step = jax.jit(steps_lib.make_train_step(model, tcfg, mesh),
-                       donate_argnums=(0, 1))
         batch = make_batch(cfg, args.batch, args.seq)
-        for t in range(args.steps):
-            ctx = steps_lib.default_round_ctx(mesh, seed=t)
-            t0 = time.time()
-            params, opt_state, metrics = step(params, opt_state, batch, ctx)
-            loss = float(metrics["loss"])
-            print(f"step {t:4d} loss={loss:.4f} ({time.time()-t0:.2f}s)",
-                  flush=True)
+        if args.scan_rounds > 0:
+            # scan engine: one dispatch per n-round chunk, channels +
+            # schedules precomputed for the whole run in one batched P2
+            # solve (DESIGN.md §11)
+            n = args.scan_rounds
+            D = sum(int(np.prod(l.shape))
+                    for l in jax.tree_util.tree_leaves(params))
+            span = steps_lib.make_scheduled_round_span(
+                mesh, tcfg, D, args.steps)
+            scan_steps = {}   # chunk length -> jitted program (full + tail)
+
+            def run_chunk(t0_round, m):
+                if m not in scan_steps:
+                    scan_steps[m] = jax.jit(
+                        steps_lib.make_scan_train_step(model, tcfg, mesh,
+                                                       m),
+                        donate_argnums=(0, 1))
+                ctxs = jax.tree_util.tree_map(
+                    lambda x: x[t0_round:t0_round + m], span)
+                return scan_steps[m](params, opt_state, batch, ctxs)
+
+            for t0_round in range(0, args.steps, n):
+                m = min(n, args.steps - t0_round)
+                t0 = time.time()
+                params, opt_state, metrics = run_chunk(t0_round, m)
+                loss = float(metrics["loss"][-1])
+                print(f"rounds {t0_round:4d}..{t0_round + m - 1} "
+                      f"loss={loss:.4f} ({time.time()-t0:.2f}s)",
+                      flush=True)
+        else:
+            step = jax.jit(steps_lib.make_train_step(model, tcfg, mesh),
+                           donate_argnums=(0, 1))
+            for t in range(args.steps):
+                ctx = steps_lib.default_round_ctx(mesh, seed=t)
+                t0 = time.time()
+                params, opt_state, metrics = step(params, opt_state,
+                                                  batch, ctx)
+                loss = float(metrics["loss"])
+                print(f"step {t:4d} loss={loss:.4f} "
+                      f"({time.time()-t0:.2f}s)", flush=True)
         if args.ckpt_dir:
             from repro.checkpoint import save
             path = save(args.ckpt_dir, args.steps, params)

@@ -10,11 +10,11 @@ large U, and ``scenario`` generates the time-correlated fading
 trajectories that feed them. See DESIGN.md §10.
 
 Layering: this package imports ``repro.kernels`` and the leaf analysis
-module ``repro.core.error_floor`` only; ``repro.core`` and
-``repro.fl`` consume it (``repro.core.scheduling`` is the deprecation shim
-over ``repro.sched.reference``, the NumPy parity oracle).
+module ``repro.core.error_floor`` only; ``repro.core``, ``repro.engine``
+and ``repro.fl`` consume it (``repro.sched.reference`` is the NumPy
+parity oracle the batched solvers are tested against).
 """
-from repro.sched.admm import admm_solve_batched
+from repro.sched.admm import admm_solve_batched, admm_solve_batched_jit
 from repro.sched.config import SchedConfig
 from repro.sched.greedy import greedy_solve_batched, prefix_sweep
 from repro.sched.problem import BatchedProblem, rt_from_stats
@@ -28,7 +28,8 @@ from repro.sched.scenario import (ScenarioConfig, generate, generate_fades,
 
 __all__ = [
     "BatchedProblem", "Problem", "ScenarioConfig", "SchedConfig",
-    "Scheduler", "admm_solve", "admm_solve_batched", "enumerate_solve",
+    "Scheduler", "admm_solve", "admm_solve_batched",
+    "admm_solve_batched_jit", "enumerate_solve",
     "generate", "generate_fades", "get_scheduler", "greedy_prefix_bound",
     "greedy_solve", "greedy_solve_batched", "list_schedulers", "optimal_bt",
     "prefix_sweep", "register_scheduler", "round_problems", "rt_from_stats",

@@ -233,6 +233,42 @@ def _results_batched(prob, beta):
     return beta, b_t, prob.rt(beta, b_t)
 
 
+@functools.partial(jax.jit, static_argnames="cfg")
+def admm_solve_batched_jit(prob: BatchedProblem,
+                           cfg: Optional[SchedConfig] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fully device-resident Algorithm 2 — the scan-safe sibling of
+    ``admm_solve_batched`` (callable inside ``lax.scan``/``vmap``, e.g.
+    from the FL engine's round body, DESIGN.md §11).
+
+    Same masked ``_outer_iter`` updates and flip-polish as the compacted
+    solver, so per-lane results are bit-identical; the difference is
+    purely orchestration: convergence is a ``lax.while_loop`` over scan
+    chunks instead of the host compaction loop, and the polish runs
+    vmapped over all lanes with the greedy-prefix early exit applied as a
+    mask. Use the compacted entry for large fleets (it pays for the
+    convergence distribution, not the straggler); use this one where the
+    call must stay inside a jitted program."""
+    cfg = cfg or _DEFAULT
+
+    def chunk(st):
+        def body(st, _):
+            return _outer_iter(prob, cfg, st), ()
+
+        st, _ = jax.lax.scan(body, st, None, length=_CHUNK)
+        return st
+
+    def not_done(st):
+        return ~jnp.all(st[6] | (st[7] >= cfg.max_iters))
+
+    st = jax.lax.while_loop(not_done, chunk, _init_state(prob))
+    beta, best0, active = _project_batched(prob, st[1])
+    polished = jax.vmap(lambda p, b, r0: _polish_one(p, cfg, b, r0))(
+        prob, beta, best0)
+    beta = jnp.where(active[..., None], polished, beta)
+    return _results_batched(prob, beta)
+
+
 def _finalize_batched(prob, cfg, beta):
     """Project + polish, compacting to the polish-active instances (most
     fleets exit on the greedy-prefix bound and skip the scan entirely)."""

@@ -2,7 +2,7 @@
 
 P2:  min_{b_t, β_t} R_t   s.t.  β_i² K_i² b_t² / h_i² ≤ P_i^Max, β ∈ {0,1}^U.
 
-Moved here from ``repro.core.scheduling`` (now a deprecation shim) when the
+Moved here from ``repro.core.scheduling`` (shim since retired) when the
 batched device-resident solvers landed in ``repro.sched`` (DESIGN.md §10).
 This module stays the **parity oracle**: scalar, float64, one instance per
 call — ``repro.sched.admm.admm_solve_batched`` and

@@ -15,7 +15,10 @@ Built-ins:
   enum             Algorithm 1, exact O(2^U) (reference, small U)
   admm             Algorithm 2 + flip-polish (NumPy reference oracle)
   greedy           prefix search, loop form (reference oracle)
-  admm_batched     Algorithm 2 vmapped + while-converged (repro.sched.admm)
+  admm_batched     Algorithm 2 vmapped, host-compacted between scan
+                   chunks — the fleet path (repro.sched.admm)
+  admm_batched_jit scan-safe Algorithm 2 (lax.while_loop, no host
+                   compaction) — what the FL engine inlines (DESIGN §11)
   greedy_batched   vectorized/Pallas prefix sweep (repro.sched.greedy)
 
 Single instances lift to B = 1 for the batched entries; batched problems
@@ -29,7 +32,7 @@ from typing import Callable, Dict, Optional, Tuple, Union
 import numpy as np
 
 from repro.sched import reference as ref
-from repro.sched.admm import admm_solve_batched
+from repro.sched.admm import admm_solve_batched, admm_solve_batched_jit
 from repro.sched.config import SchedConfig
 from repro.sched.greedy import greedy_solve_batched
 from repro.sched.problem import BatchedProblem
@@ -126,6 +129,13 @@ def _greedy(prob: Problem, cfg):
 @register_scheduler("admm_batched", batched=True)
 def _admm_batched(prob: BatchedProblem, cfg):
     return admm_solve_batched(prob, cfg)
+
+
+@register_scheduler("admm_batched_jit", batched=True)
+def _admm_batched_jit(prob: BatchedProblem, cfg):
+    # the scan-safe ADMM the FL engine inlines in its round body
+    # (DESIGN.md §11); exposed here so host callers hit the same program
+    return admm_solve_batched_jit(prob, cfg)
 
 
 @register_scheduler("greedy_batched", batched=True)

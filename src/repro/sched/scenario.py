@@ -31,7 +31,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.channel import H_MIN
+from repro.core.channel import H_MIN, draw_cn, gauss_markov_step
 from repro.core.error_floor import AnalysisConstants
 from repro.sched.problem import BatchedProblem
 
@@ -85,23 +85,20 @@ class ScenarioConfig:
 
 def generate_fades(cfg: ScenarioConfig, key) -> jnp.ndarray:
     """Complex small-scale fades, (rounds, cells, U) complex64; stationary
-    CN(0, 1) marginal, lag-ℓ autocorrelation ρ^ℓ."""
+    CN(0, 1) marginal, lag-ℓ autocorrelation ρ^ℓ. The draw and the
+    recursion are ``core/channel.py``'s ``draw_cn``/``gauss_markov_step``
+    — the same fade model the FL engine steps round by round
+    (DESIGN.md §11), sliced here as a whole trajectory."""
     rho = jnp.float32(cfg.rho)
-    innov = jnp.sqrt(jnp.maximum(1.0 - rho ** 2, 0.0))
     shape = (cfg.cells, cfg.workers)
 
-    def cn(k):
-        re, im = jax.random.split(k)
-        return (jax.random.normal(re, shape)
-                + 1j * jax.random.normal(im, shape)) / jnp.sqrt(2.0)
-
     k0, kw = jax.random.split(key)
-    g0 = cn(k0)
+    g0 = draw_cn(k0, shape)
     if cfg.rounds == 1:
         return g0[None].astype(jnp.complex64)
 
     def step(g, k):
-        g = rho * g + innov * cn(k)
+        g = gauss_markov_step(g, k, rho)
         return g, g
 
     _, gs = jax.lax.scan(step, g0, jax.random.split(kw, cfg.rounds - 1))

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.measurement import make_phi
-from repro.core.reconstruction import biht_sign, hard_threshold, iht
+from repro.decode import biht_sign, hard_threshold, iht
 
 
 def sparse_vec(key, d, k):

@@ -291,16 +291,6 @@ def test_batched_problem_no_recompile_on_new_channels():
         admm_solve_batched(bp)
 
 
-def test_core_scheduling_shim_warns_and_reexports():
-    import importlib
-    import repro.core.scheduling as shim
-    with pytest.warns(DeprecationWarning, match="moved to repro.sched"):
-        importlib.reload(shim)
-    from repro.sched import reference
-    assert shim.admm_solve is reference.admm_solve
-    assert shim.Problem is reference.Problem
-
-
 def test_scheduled_round_ctx_smoke():
     """launch/steps.py device-resident scheduling path (DESIGN.md §10)."""
     from jax.sharding import Mesh
