@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import channel as chan
-from repro.core.error_floor import AnalysisConstants
+from repro.theory import AnalysisConstants
 from repro.core.obcsaa import OBCSAAConfig, simulate_round
 from repro.core.quantize import sign_pm1
 from repro.core.sparsify import flatten_pytree

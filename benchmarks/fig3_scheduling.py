@@ -12,7 +12,7 @@ import time
 import numpy as np
 
 from benchmarks.common import acc_summary, emit, run_fl, run_fl_sweep
-from repro.core.error_floor import AnalysisConstants
+from repro.theory import AnalysisConstants
 from repro.core.obcsaa import OBCSAAConfig
 from repro.sched import Problem, admm_solve, enumerate_solve
 

@@ -32,18 +32,43 @@ def fmt_bytes(b):
     return f"{b:.1f}PB"
 
 
+def _not_yet_run_note(missing: list, present: list) -> str:
+    """Annotation for arch×shape combos with no dry-run artifact:
+    ``experiments/dryrun/`` is generated locally (it is .gitignored), so
+    an absent JSON means the combination has not been run in this
+    environment — NOT that it is broken. Archs with some artifacts are
+    called out separately so the note never contradicts rows above."""
+    if not missing:
+        return ""
+    have = {a for a, _ in present}
+    full = sorted({a for a, _ in missing} - have)
+    partial = sorted({a for a, _ in missing} & have)
+    note = ("\n\nDry-run artifacts under `experiments/dryrun/` are "
+            "generated locally via `python -m repro.launch.dryrun` and "
+            "not committed; combinations without one are not yet run in "
+            "this environment, not broken.")
+    if full:
+        note += (" No artifacts yet: "
+                 + ", ".join(f"`{a}`" for a in full) + ".")
+    for a in partial:
+        n_miss = sum(1 for x, _ in missing if x == a)
+        note += f" Partially run: `{a}` ({n_miss} combos remaining)."
+    return note
+
+
 def dryrun_table() -> str:
     lines = ["| arch | shape | mesh | status | temp/dev | HLO GFLOPs/dev | "
              "coll wire/dev | compile |",
              "|---|---|---|---|---|---|---|---|"]
+    missing, present = [], []
     for arch in ASSIGNED_ARCHS:
         for shape in INPUT_SHAPES:
             for tag in ("single", "multi"):
                 rec = load(arch, shape, tag)
                 if rec is None:
-                    lines.append(f"| {arch} | {shape} | {tag} | MISSING | "
-                                 "| | | |")
+                    missing.append((arch, (shape, tag)))
                     continue
+                present.append((arch, (shape, tag)))
                 if rec["status"] == "skipped":
                     lines.append(f"| {arch} | {shape} | {tag} | skipped "
                                  f"(sub-quadratic rule) | | | | |")
@@ -60,20 +85,24 @@ def dryrun_table() -> str:
                     f"{rec['cost'].get('flops', 0)/1e9:.1f} | "
                     f"{fmt_bytes(c.get('total_wire_bytes', c['total_bytes']))} | "
                     f"{rec['compile_s']}s |")
-    return "\n".join(lines)
+    return "\n".join(lines) + _not_yet_run_note(missing, present)
 
 
 def roofline_table() -> str:
     lines = ["| arch | shape | compute(s) | memory(s) | collective(s) | "
              "bottleneck | useful ratio | bound step(s) |",
              "|---|---|---|---|---|---|---|---|"]
+    missing, present = [], []
     for arch in ASSIGNED_ARCHS:
         for shape in INPUT_SHAPES:
             rec = load(arch, shape, "single")
-            if rec is None or rec["status"] != "ok":
-                status = "-" if rec is None else rec["status"]
-                lines.append(f"| {arch} | {shape} | - | - | - | {status} | "
-                             "- | - |")
+            if rec is None:
+                missing.append((arch, shape))
+                continue
+            present.append((arch, shape))
+            if rec["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | - | - | - | "
+                             f"{rec['status']} | - | - |")
                 continue
             a = analyze(rec)
             lines.append(
@@ -81,7 +110,7 @@ def roofline_table() -> str:
                 f"{a['memory_s']:.4f} | {a['collective_s']:.4f} | "
                 f"**{a['bottleneck']}** | {a['useful_ratio']} | "
                 f"{a['step_time_bound_s']:.4f} |")
-    return "\n".join(lines)
+    return "\n".join(lines) + _not_yet_run_note(missing, present)
 
 
 def decoder_rows():
@@ -143,6 +172,25 @@ def engine_table() -> str:
     return "\n".join(lines)
 
 
+def theory_rows():
+    """theory_bench rows, replayed from experiments/bench_cache.json or
+    run fresh once and cached (same policy as the engine table)."""
+    from benchmarks.common import cached_rows, cached_suite
+    rows = cached_rows("theory:v1")
+    if rows is not None:
+        return rows
+    from benchmarks import theory_bench
+    return cached_suite("theory:v1", theory_bench.main)
+
+
+def theory_table() -> str:
+    lines = ["| run | us/arm-round | result |", "|---|---|---|"]
+    for name, us, derived in theory_rows():
+        lines.append(f"| {name.split('/', 1)[-1]} | {us:,.0f} | "
+                     f"{derived or '-'} |")
+    return "\n".join(lines)
+
+
 def main():
     OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text(
@@ -170,6 +218,21 @@ def main():
         "same legacy loop on today's accelerated selection kernels; "
         "parity rows are the CI-asserted invariants).\n\n"
         + engine_table()
+        + "\n\n## Theorem-1 bound vs measured trajectory "
+        "(repro.theory, DESIGN.md §12)\n\n"
+        "Predicted per-round R_t (eq. 24, the `ErrorBudget` scan outputs; "
+        "analysis constant G instantiated from the actual initial worker "
+        "gradients) against the measured aggregation error ‖ĝ−ḡ‖² probe, "
+        "BOTH SNR arms from ONE `run_sweep` call on the MNIST-MLP task — "
+        "`bound_ge_measured` must hold at every logged round. The tuner "
+        "rows sweep the (κ_c, S_c) grid over the closed form under the "
+        "paper's uplink symbol budget: its win over the RIP-infeasible "
+        "mistuned design is judged on the bound's own prediction target "
+        "(measured aggregation error; final loss/acc reported alongside — "
+        "eq. 19's worst-case sparsification term is nearly flat in κ at "
+        "MLP scale, so the actionable tuner signal is the C(δ) "
+        "feasibility cut, DESIGN.md §12).\n\n"
+        + theory_table()
         + "\n\n## Dry-run table\n\n" + dryrun_table()
         + "\n\n## Roofline table (single-pod, 256 chips)\n\n"
         + roofline_table() + "\n")

@@ -18,7 +18,7 @@ def main() -> None:
                     help="paper-scale round counts (slow on CPU)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig1..fig5,kernels,"
-                         "decoders,sched,engine,ablations,roofline")
+                         "decoders,sched,engine,theory,ablations,roofline")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
     rounds = 300 if args.full else 60
@@ -26,7 +26,8 @@ def main() -> None:
     from benchmarks import (ablations, decoders_bench, engine_bench,
                             fig1_sparsification, fig2_dimension,
                             fig3_scheduling, fig4_samples, fig5_noise,
-                            kernels_bench, roofline, sched_bench)
+                            kernels_bench, roofline, sched_bench,
+                            theory_bench)
 
     from benchmarks.common import cached_suite
 
@@ -40,13 +41,14 @@ def main() -> None:
         "decoders": decoders_bench.main,
         "sched": sched_bench.main,
         "engine": engine_bench.main,
+        "theory": theory_bench.main,
         "ablations": lambda: ablations.main(rounds=max(40, rounds // 2)),
         "roofline": roofline.main,   # cheap, always fresh (reads dryrun/)
     }
-    # kernels + sched + engine + roofline always run fresh: they are the
-    # CI smoke steps and must exercise real code, not replay
+    # kernels + sched + engine + theory + roofline always run fresh: they
+    # are the CI smoke steps and must exercise real code, not replay
     # experiments/bench_cache.json
-    fresh = {"kernels", "sched", "engine", "roofline"}
+    fresh = {"kernels", "sched", "engine", "theory", "roofline"}
     # fig/ablation suites moved to engine arms sweeps (v2): the v1 cache
     # rows were produced by the pre-engine loop AND its half-normal
     # channel draw — keys are bumped so a full run regenerates them

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.error_floor import AnalysisConstants
+from repro.theory import AnalysisConstants
 from repro.kernels.prefix_eval import prefix_eval
 from repro.sched import (BatchedProblem, Problem, SchedConfig,
                          admm_solve, admm_solve_batched, greedy_solve,

@@ -17,7 +17,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core.error_floor import AnalysisConstants
+from repro.theory import AnalysisConstants
 from repro.sched import (Problem, ScenarioConfig, admm_solve_batched,
                          generate, greedy_solve_batched, round_problems,
                          schedule)

@@ -1,7 +1,10 @@
-"""The paper's primary contribution: OBCSAA + convergence analysis + P2 solvers."""
-from repro.core.error_floor import (AnalysisConstants, bt_term,
-                                    lemma1_error_bound, rt_objective,
-                                    theorem1_rate)
+"""The paper's primary contribution: OBCSAA + convergence analysis + P2 solvers.
+
+The convergence analysis itself lives in ``repro.theory`` (DESIGN.md §12);
+the names below stay re-exported for compatibility."""
+from repro.theory.bounds import (AnalysisConstants, bt_term,
+                                 lemma1_error_bound, rt_objective,
+                                 theorem1_rate)
 from repro.core.obcsaa import (OBCSAAConfig, comm_stats, compress_chunks,
                                reconstruct_chunks, shardmap_aggregate,
                                shardmap_compress, shardmap_reconstruct,

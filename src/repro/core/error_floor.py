@@ -1,73 +1,15 @@
-"""Closed-form convergence analysis (paper §III).
-
-Lemma 1 — total aggregation error bound (eq. 19):
-  E||e_t||² ≤ C²(1 + (1+δ)(D−κ)/(SD) G² + σ²/(Σ K_i β_i b_t)²)
-             + Σ_i β_i (1+δ)(D−κ)/D G²
-
-Theorem 1 — expected convergence rate (eq. 20-21) with α = 1/L; B_t is the
-per-round error-floor contribution; R_t = 2L·B_t is the objective of the
-joint optimization (eq. 24).
+"""Compatibility re-export — the convergence analysis moved to
+``repro.theory`` (DESIGN.md §12), the single source of truth for
+eq. 19/21/24. Import from ``repro.theory``; this module stays as a
+deprecation-free alias for existing callers.
 """
-from __future__ import annotations
+from repro.theory.bounds import (AnalysisConstants, ErrorBudget, bt_term,
+                                 error_budget, lemma1_error_bound,
+                                 rt_objective, theorem1_rate,
+                                 theorem1_trajectory)
 
-from dataclasses import dataclass
-
-import jax.numpy as jnp
-
-from repro.core.measurement import reconstruction_constant
-
-
-@dataclass(frozen=True)
-class AnalysisConstants:
-    """Paper's analysis constants (Assumptions 1-4 + RIP)."""
-    L: float = 10.0          # Lipschitz smoothness
-    rho1: float = 1.0        # sample-gradient bound, eq. (17)
-    rho2: float = 0.5        # sample-gradient slope, 0 <= rho2 < 1
-    G: float = 10.0          # local gradient bound, eq. (18)
-    delta: float = 0.2       # RIP constant (< sqrt(2)-1)
-
-    @property
-    def C(self) -> float:
-        return reconstruction_constant(self.delta)
-
-
-def lemma1_error_bound(c: AnalysisConstants, *, D: int, S: int, kappa: int,
-                       beta, k_weights, b_t, noise_var):
-    """Eq. (19)."""
-    beta = jnp.asarray(beta, jnp.float32)
-    k_weights = jnp.asarray(k_weights, jnp.float32)
-    denom = jnp.sum(k_weights * beta) * b_t
-    C2 = c.C ** 2
-    recon = C2 * (1.0
-                  + (1.0 + c.delta) * (D - kappa) / (S * D) * c.G ** 2
-                  + noise_var / jnp.maximum(denom ** 2, 1e-30))
-    sparse = jnp.sum(beta) * (1.0 + c.delta) * (D - kappa) / D * c.G ** 2
-    return recon + sparse
-
-
-def bt_term(c: AnalysisConstants, *, D: int, S: int, kappa: int, beta,
-            k_weights, b_t, noise_var):
-    """Eq. (21): B_t."""
-    k_weights = jnp.asarray(k_weights, jnp.float32)
-    beta = jnp.asarray(beta, jnp.float32)
-    K = jnp.sum(k_weights)
-    sched = jnp.sum(k_weights * c.rho1 * (1.0 - beta)) / (2.0 * c.L * K)
-    err = lemma1_error_bound(c, D=D, S=S, kappa=kappa, beta=beta,
-                             k_weights=k_weights, b_t=b_t,
-                             noise_var=noise_var) / (2.0 * c.L)
-    return sched + err
-
-
-def rt_objective(c: AnalysisConstants, *, D: int, S: int, kappa: int, beta,
-                 k_weights, b_t, noise_var):
-    """Eq. (24): R_t = 2L·B_t — the joint-optimization objective."""
-    return 2.0 * c.L * bt_term(c, D=D, S=S, kappa=kappa, beta=beta,
-                               k_weights=k_weights, b_t=b_t,
-                               noise_var=noise_var)
-
-
-def theorem1_rate(c: AnalysisConstants, *, T: int, f0_minus_fstar: float,
-                  bt_sum: float):
-    """Eq. (20): bound on (1/T) Σ ||∇F||²."""
-    lead = 2.0 * c.L / (T * (1.0 - c.rho2))
-    return lead * f0_minus_fstar + lead * bt_sum
+__all__ = [
+    "AnalysisConstants", "ErrorBudget", "bt_term", "error_budget",
+    "lemma1_error_bound", "rt_objective", "theorem1_rate",
+    "theorem1_trajectory",
+]

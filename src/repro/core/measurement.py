@@ -40,7 +40,10 @@ def rip_constant_estimate(phi: jnp.ndarray, sparsity: int, n_trials: int = 64,
 def reconstruction_constant(delta: float) -> float:
     """Paper eq. (46): C = 2ϖ/(1−ϱ), ϖ = 2√(1+δ)/√(1−δ), ϱ = √2·δ/(1−δ).
 
-    Valid for δ ≤ √2 − 1 (Candès RIP condition)."""
+    Valid for δ ≤ √2 − 1 (Candès RIP condition) — raises otherwise; the
+    traced, array-valued sibling used by the theory layer's tuner grids
+    returns +inf instead (``repro.theory.bounds.
+    reconstruction_constant_traced``, DESIGN.md §12)."""
     import math
     varpi = 2.0 * math.sqrt(1.0 + delta) / math.sqrt(1.0 - delta)
     varrho = math.sqrt(2.0) * delta / (1.0 - delta)

@@ -5,6 +5,10 @@ p_{i,t} = β_{i,t} K_i b_t / h_{i,t}. Because every transmitted symbol is ±1,
 constraint (11) therefore bounds b_t per worker:
 
     b_t ≤ h_i √(P_i^Max) / K_i   for every scheduled worker i.
+
+The same caps feed the P2 solvers' b_t* = min scheduled cap (DESIGN.md
+§10) and the noise term σ²/(ΣK_iβ_ib_t)² of the Theorem-1 error budget
+(repro.theory, DESIGN.md §12).
 """
 from __future__ import annotations
 

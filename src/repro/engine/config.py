@@ -11,7 +11,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.error_floor import AnalysisConstants
+from repro.theory.bounds import AnalysisConstants
 from repro.core.obcsaa import OBCSAAConfig
 from repro.sched.config import SchedConfig
 
@@ -54,6 +54,11 @@ class FLConfig:
     mode: str = "auto"
     # Solver knobs for the batched P2 schedulers (None -> defaults)
     sched_cfg: Optional[SchedConfig] = None
+    # Measured-aggregation-error probe (repro.theory, DESIGN.md §12): emit
+    # ‖ĝ−ḡ‖² per round next to the predicted Theorem-1 budget. Costs one
+    # extra dense (U, D) reduction per round; OFF by default — disabled,
+    # the round trace is exactly the pre-probe engine (bitwise-neutral).
+    probe_agg_error: bool = False
 
     def engine_capable(self) -> bool:
         """Can every per-round decision run inside one jitted program?"""

@@ -40,6 +40,7 @@ from repro.engine.state import Arms, EngineState, RoundStats
 from repro.sched.admm import admm_solve_batched_jit
 from repro.sched.greedy import greedy_solve_batched
 from repro.sched.problem import BatchedProblem
+from repro.theory.bounds import error_budget
 
 _FADE_INIT_FOLD = 0x7FADE   # fold_in tag for the stationary t=0 fade draw
 
@@ -94,6 +95,14 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
     ef = cfg.error_feedback
     rho = jnp.float32(cfg.channel_rho)
     scfg = cfg.sched_cfg
+    probe = cfg.probe_agg_error
+    # Theorem-1 budget geometry: the block-diagonal Φ measures n_chunks·S_c
+    # symbols of an (up to) n_chunks·κ_c-sparse vector (DESIGN.md §4/§12).
+    # Eq. 19 models the 1-bit CS pipeline, so the budget is only emitted
+    # for the obcsaa aggregator (None leaf otherwise — fixed per build)
+    track_bound = cfg.aggregator == "obcsaa"
+    s_eff = n_chunks * ob.measure
+    kappa_eff = min(n_chunks * ob.topk, D)
 
     def init_state(params, arm: Arms) -> EngineState:
         _, fade0 = chan.draw_fades(
@@ -155,10 +164,11 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
         presparse = False
         if ef:
             grads, residual, sparse = ef_split(grads, residual)
-            if cfg.aggregator == "obcsaa":
-                # fused EF: the residual split's sparse_κ IS what obcsaa
-                # transmits — skip the second selection (DESIGN.md §11)
-                grads, presparse = sparse, True
+        dense = grads          # probe target: pre-compression gradients
+        if ef and cfg.aggregator == "obcsaa":
+            # fused EF: the residual split's sparse_κ IS what obcsaa
+            # transmits — skip the second selection (DESIGN.md §11)
+            grads, presparse = sparse, True
         x0 = state.decode_x0
         if warm:
             # schedule change -> reset warm-start state (DESIGN.md §9);
@@ -187,8 +197,26 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
         new_state = EngineState(params=params, opt_state=opt_state,
                                 fade=fade, prev_beta=beta, decode_x0=x0,
                                 residual=residual)
+        # predicted Theorem-1 budget at this round's operating point
+        # (repro.theory, DESIGN.md §12) — pure closed-form scalar math on
+        # (β, b_t, σ²), no effect on the training dataflow above
+        budget = None
+        if track_bound:
+            budget = error_budget(cfg.const, D=D, S=s_eff,
+                                  kappa=kappa_eff, beta=beta,
+                                  k_weights=k_weights, b_t=b_t,
+                                  noise_var=arm.noise_var)
+        agg_err = None
+        if probe:
+            # measured ‖ĝ−ḡ‖²: the decoded estimate against the
+            # error-free weighted mean over the scheduled cohort — the
+            # quantity eq. (19) bounds. Static flag: off, the trace is
+            # the pre-probe engine (DESIGN.md §12 measure-zero contract)
+            ideal = perfect_aggregate(dense, k_weights, beta)
+            agg_err = jnp.sum((ghat[:D] - ideal) ** 2)
         stats = RoundStats(n_scheduled=jnp.sum(beta).astype(jnp.int32),
-                           b_t=jnp.asarray(b_t, jnp.float32))
+                           b_t=jnp.asarray(b_t, jnp.float32),
+                           budget=budget, agg_err=agg_err)
         return new_state, stats
 
     def full_round(state: EngineState, arm: Arms, worker_data, k_weights,

@@ -25,6 +25,7 @@ from repro.core.sparsify import flatten_pytree
 from repro.engine.core import EngineFns, build_engine
 from repro.engine.state import Arms, make_arms, single_arm
 from repro.optim.optimizers import sgd
+from repro.theory.bounds import ErrorBudget
 
 
 def _donate():
@@ -114,7 +115,13 @@ class EngineRun:
 
         Returns a dict of host arrays: per-round scheduling trajectories
         ``n_scheduled``/``b_t`` with shape (A, rounds) (dense — every
-        round, DESIGN.md §11), eval streams ``eval_rounds``/``loss``/
+        round, DESIGN.md §11), the predicted Theorem-1 ``budget``
+        (``ErrorBudget`` of (A, rounds) arrays) with its ``rt_bound``
+        total (repro.theory, DESIGN.md §12) — the whole seeds×SNR grid's
+        bounds from the same compiled program; eq. 19 models the 1-bit CS
+        pipeline, so these keys are present for ``aggregator="obcsaa"``
+        only — plus ``agg_err`` when the
+        measured-error probe is on, eval streams ``eval_rounds``/``loss``/
         ``accuracy`` when an eval_fn is present, and the final per-arm
         ``params`` (stacked pytree) + ``state``."""
         cfg = self.cfg
@@ -126,11 +133,16 @@ class EngineRun:
                          )(arms)
         eval_v = jax.vmap(self.eval_fn) if self.eval_fn else None
         n_sched, b_ts, losses, accs, eval_ts = [], [], [], [], []
+        budgets, errs = [], []
         for t0, n in chunk_spans(rounds, eval_every):
             state, stats = self.run_chunk(state, arms, t0, n, vmapped=True)
             # stats leaves: (A, n) -> per-round trajectory slabs
             n_sched.append(np.asarray(stats.n_scheduled))
             b_ts.append(np.asarray(stats.b_t))
+            if stats.budget is not None:
+                budgets.append(tuple(np.asarray(x) for x in stats.budget))
+            if stats.agg_err is not None:
+                errs.append(np.asarray(stats.agg_err))
             if eval_v is not None:
                 loss, acc = eval_v(state.params)
                 losses.append(np.asarray(loss))
@@ -140,6 +152,14 @@ class EngineRun:
                "b_t": np.concatenate(b_ts, axis=1),
                "state": state, "params": state.params, "arms": arms}
         assert out["n_scheduled"].shape == (A, rounds)
+        if budgets:
+            budget = ErrorBudget(*(np.concatenate(parts, axis=1)
+                                   for parts in zip(*budgets)))
+            out["budget"] = budget
+            out["rt_bound"] = np.asarray(budget.rt())
+            assert out["rt_bound"].shape == (A, rounds)
+        if errs:
+            out["agg_err"] = np.concatenate(errs, axis=1)
         if eval_v is not None:
             out["eval_rounds"] = np.asarray(eval_ts)
             out["loss"] = np.stack(losses, axis=1)       # (A, n_evals)

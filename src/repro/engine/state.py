@@ -34,10 +34,19 @@ class EngineState(NamedTuple):
 
 
 class RoundStats(NamedTuple):
-    """Per-round scheduling stats, emitted EVERY round as scan outputs —
-    the dense trajectory the eval-gated ``RoundLog`` used to drop."""
+    """Per-round scheduling + theory stats, emitted EVERY round as scan
+    outputs — the dense trajectory the eval-gated ``RoundLog`` used to
+    drop. ``budget`` is the predicted Theorem-1 ``ErrorBudget`` pytree
+    (repro.theory, DESIGN.md §12) evaluated at this round's (β, b_t, σ²)
+    — ``None`` unless the aggregator is the 1-bit CS pipeline eq. 19
+    models (``obcsaa``); ``agg_err`` is the measured ‖ĝ−ḡ‖² probe —
+    ``None`` unless ``FLConfig.probe_agg_error`` is on. ``None`` is an
+    empty pytree node, so the scan output structure stays fixed per
+    build."""
     n_scheduled: jnp.ndarray           # i32: Σβ_t
     b_t: jnp.ndarray                   # f32: power scaling factor
+    budget: Any = None                 # ErrorBudget | None (theory track)
+    agg_err: Optional[jnp.ndarray] = None   # f32: ‖ĝ−ḡ‖² probe | None
 
 
 class Arms(NamedTuple):

@@ -56,11 +56,17 @@ class RoundLog:
 
 @dataclass
 class SchedLog:
-    """Dense per-round scheduling stats — emitted EVERY round from the
-    scan carry (no eval-gated holes; DESIGN.md §11)."""
+    """Dense per-round scheduling + theory stats — emitted EVERY round
+    from the scan carry (no eval-gated holes; DESIGN.md §11/§12).
+    ``rt_bound`` is the predicted Theorem-1 R_t at the round's operating
+    point (repro.theory; NaN for non-obcsaa aggregators — eq. 19 models
+    the 1-bit CS pipeline); ``agg_err`` is the measured ‖ĝ−ḡ‖² probe,
+    NaN unless ``FLConfig.probe_agg_error`` is on."""
     round: int
     n_scheduled: int
     b_t: float
+    rt_bound: float = float("nan")
+    agg_err: float = float("nan")
 
 
 class FederatedTrainer:
@@ -107,12 +113,14 @@ class FederatedTrainer:
 
     @property
     def sched_trajectory(self) -> Dict[str, np.ndarray]:
-        """Dense (rounds,) scheduling trajectories."""
+        """Dense (rounds,) scheduling + theory trajectories."""
         return {
             "round": np.asarray([s.round for s in self.sched_logs]),
             "n_scheduled": np.asarray([s.n_scheduled
                                        for s in self.sched_logs]),
             "b_t": np.asarray([s.b_t for s in self.sched_logs]),
+            "rt_bound": np.asarray([s.rt_bound for s in self.sched_logs]),
+            "agg_err": np.asarray([s.agg_err for s in self.sched_logs]),
         }
 
     # -- host reference path ----------------------------------------------
@@ -142,8 +150,12 @@ class FederatedTrainer:
         self._state, stats = self._round_jit(
             self._state, arm, self.worker_data, self._engine.k_weights,
             jnp.int32(t), h, fade, beta, b_t)
-        self.sched_logs.append(SchedLog(t, int(stats.n_scheduled),
-                                        float(stats.b_t)))
+        self.sched_logs.append(SchedLog(
+            t, int(stats.n_scheduled), float(stats.b_t),
+            float(np.asarray(stats.budget.rt()))
+            if stats.budget is not None else float("nan"),
+            float(stats.agg_err) if stats.agg_err is not None
+            else float("nan")))
         return {"beta": np.asarray(beta), "b_t": float(b_t),
                 "h": np.asarray(h)}
 
@@ -157,8 +169,13 @@ class FederatedTrainer:
                                                         self._arm, t0, n)
             ns = np.asarray(stats.n_scheduled)
             bt = np.asarray(stats.b_t)
+            rt = (np.asarray(stats.budget.rt())
+                  if stats.budget is not None else np.full(n, np.nan))
+            err = (np.asarray(stats.agg_err) if stats.agg_err is not None
+                   else np.full(n, np.nan))
             self.sched_logs.extend(
-                SchedLog(t0 + i, int(ns[i]), float(bt[i]))
+                SchedLog(t0 + i, int(ns[i]), float(bt[i]), float(rt[i]),
+                         float(err[i]))
                 for i in range(n))
             if self.eval_fn:
                 t = t0 + n - 1

@@ -7,7 +7,7 @@ from typing import Optional, Tuple
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.error_floor import AnalysisConstants
+from repro.theory.bounds import AnalysisConstants
 from repro.core.obcsaa import OBCSAAConfig, reconstruct_chunks
 from repro.sched import Problem, SchedConfig, schedule
 

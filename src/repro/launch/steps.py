@@ -206,7 +206,7 @@ def make_scheduled_round_ctx(mesh, tcfg: TrainConfig, D: int, *,
     the OBCSAA train step consumes — the device-resident replacement for
     ``default_round_ctx``'s everyone-scheduled stub. ``D`` is the model's
     flat parameter count (the R_t dimension term)."""
-    from repro.core.error_floor import AnalysisConstants
+    from repro.theory.bounds import AnalysisConstants
     from repro.sched import SchedConfig, round_problems, schedule
     from repro.sched.scenario import ScenarioConfig, generate
 
@@ -242,7 +242,7 @@ def make_scheduled_round_span(mesh, tcfg: TrainConfig, D: int, rounds: int,
     (rounds, U) fading trajectory becomes a B = rounds ``BatchedProblem``
     and the scheduler runs one device pass for every round's β/b_t. The
     returned dict has (rounds, ...)-leading leaves — the scan xs."""
-    from repro.core.error_floor import AnalysisConstants
+    from repro.theory.bounds import AnalysisConstants
     from repro.sched import BatchedProblem, SchedConfig, schedule
     from repro.sched.scenario import ScenarioConfig, generate
 

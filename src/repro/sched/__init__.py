@@ -9,8 +9,8 @@ the prefix search to sort + cumsum + argmin with a Pallas sweep kernel at
 large U, and ``scenario`` generates the time-correlated fading
 trajectories that feed them. See DESIGN.md §10.
 
-Layering: this package imports ``repro.kernels`` and the leaf analysis
-module ``repro.core.error_floor`` only; ``repro.core``, ``repro.engine``
+Layering: this package imports ``repro.kernels`` and the analysis layer
+``repro.theory`` (DESIGN.md §12) only; ``repro.core``, ``repro.engine``
 and ``repro.fl`` consume it (``repro.sched.reference`` is the NumPy
 parity oracle the batched solvers are tested against).
 """

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.error_floor import AnalysisConstants
+from repro.theory.bounds import AnalysisConstants
 from repro.kernels.prefix_eval import prefix_rt
 from repro.sched.reference import Problem
 

@@ -31,7 +31,7 @@ from typing import Tuple, Union
 
 import numpy as np
 
-from repro.core.error_floor import AnalysisConstants
+from repro.theory.bounds import AnalysisConstants
 
 # Stall cut shared with the batched solver (repro.sched.admm): stop when
 # the primal residual has not improved by STALL_RTOL (relative) for

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.channel import H_MIN, draw_cn, gauss_markov_step
-from repro.core.error_floor import AnalysisConstants
+from repro.theory.bounds import AnalysisConstants
 from repro.sched.problem import BatchedProblem
 
 

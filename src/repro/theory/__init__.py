@@ -1,0 +1,32 @@
+"""repro.theory — closed-form convergence analytics (paper §III;
+DESIGN.md §12).
+
+The paper's Lemma 1 / Theorem 1 analysis as an executable subsystem:
+``bounds`` is the vectorized, vmap/scan-safe Theorem-1 engine (the
+``ErrorBudget`` pytree splits eq. 19/21 into the abstract's five
+aggregation-error sources, and the engine emits it per round as dense
+scan outputs); ``tune`` sweeps design-parameter grids over the
+closed-form R_t objective (eq. 24) with an RIP-calibrated δ(κ, S_c)
+model and returns the Pareto frontier.
+
+Layering: sits beside ``repro.decode``/``repro.sched`` — imports only
+the ``repro.core.measurement`` leaf (for C(δ) and RIP calibration);
+``repro.sched`` consumes ``AnalysisConstants`` from here, and
+``repro.engine`` threads the budget through its scan (DESIGN.md §12).
+"""
+from repro.theory.bounds import (AnalysisConstants, DELTA_MAX, ErrorBudget,
+                                 bt_term, error_budget,
+                                 error_floor_asymptote, lemma1_error_bound,
+                                 reconstruction_constant_traced,
+                                 rt_objective, theorem1_rate,
+                                 theorem1_trajectory)
+from repro.theory.tune import (calibrate_delta, delta_model, pareto_mask,
+                               tune_design)
+
+__all__ = [
+    "AnalysisConstants", "DELTA_MAX", "ErrorBudget", "bt_term",
+    "calibrate_delta", "delta_model", "error_budget",
+    "error_floor_asymptote", "lemma1_error_bound", "pareto_mask",
+    "reconstruction_constant_traced", "rt_objective", "theorem1_rate",
+    "theorem1_trajectory", "tune_design",
+]

@@ -1,0 +1,214 @@
+"""Vectorized Theorem-1 convergence engine (paper §III; DESIGN.md §12).
+
+The paper's central analytical contribution is a closed-form expression
+for the expected convergence rate of FL over the air, decomposing the
+per-round aggregation error into the five sources named in the abstract:
+sparsification, dimension reduction, quantization, signal reconstruction
+and noise.
+
+- Lemma 1 (eq. 19) bounds the total aggregation error
+  E‖e_t‖² ≤ C²(1 + (1+δ)(D−κ)/(SD)·G² + σ²/(ΣK_iβ_ib_t)²)
+           + Σ_iβ_i(1+δ)(D−κ)/D·G².
+- Theorem 1 (eq. 20-21) turns the per-round bound B_t into a convergence
+  rate with α = 1/L; the descent recursion Δ_{t+1} ≤ ρ₂Δ_t + B_t drives
+  E[F(w_t)−F(w*)] toward the error floor B/(1−ρ₂).
+- Eq. (24) regroups 2L·B_t into the R_t objective the P2 schedulers of
+  ``repro.sched`` minimize (DESIGN.md §10).
+
+``error_budget`` materializes the bound as an ``ErrorBudget`` pytree — one
+named leaf per error source — so the engine can emit it as a dense scan
+output next to the scheduling stats (DESIGN.md §11/§12) and a sweep's
+whole seeds×SNR grid gets per-round predicted bounds from one compiled
+program. Every function reduces over the LAST axis only and accepts
+array-valued D/S/κ/δ, so the same code evaluates one round, a scanned
+trajectory, a vmapped arms grid, or the tuner's candidate grid
+(``repro.theory.tune``).
+
+All quantities keep eq. (19)'s scale (squared-error units == R_t units);
+divide by 2L for B_t. The fields sum — bitwise, in field order — to
+``lemma1_error_bound`` because that function IS the sum.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+# Candès RIP condition: eq. (46)'s C(δ) is finite for δ < √2 − 1.
+DELTA_MAX = math.sqrt(2.0) - 1.0
+
+
+@dataclass(frozen=True)
+class AnalysisConstants:
+    """Paper's analysis constants (Assumptions 1-4 + RIP)."""
+    L: float = 10.0          # Lipschitz smoothness
+    rho1: float = 1.0        # sample-gradient bound, eq. (17)
+    rho2: float = 0.5        # sample-gradient slope, 0 <= rho2 < 1
+    G: float = 10.0          # local gradient bound, eq. (18)
+    delta: float = 0.2       # RIP constant (< sqrt(2)-1)
+
+    @property
+    def C(self) -> float:
+        # deferred import: repro.core re-exports this package's names, so
+        # a module-scope core import would be circular (DESIGN.md §12)
+        from repro.core.measurement import reconstruction_constant
+        return reconstruction_constant(self.delta)
+
+
+def reconstruction_constant_traced(delta):
+    """Array-valued eq. (46): C(δ) = 2ϖ/(1−ϱ), +inf where δ ≥ √2 − 1.
+
+    The scalar ``core.measurement.reconstruction_constant`` raises on an
+    invalid δ; the tuner sweeps δ(κ, S) grids through jit, so infeasible
+    candidates must yield +inf instead (their R_t then loses every
+    comparison, DESIGN.md §12)."""
+    delta = jnp.asarray(delta, jnp.float32)
+    d = jnp.clip(delta, 0.0, 0.99)          # keep the sqrts defined
+    varpi = 2.0 * jnp.sqrt(1.0 + d) / jnp.sqrt(1.0 - d)
+    varrho = jnp.sqrt(2.0) * d / (1.0 - d)
+    c = 2.0 * varpi / jnp.maximum(1.0 - varrho, 1e-9)
+    return jnp.where(delta < DELTA_MAX, c, jnp.inf)
+
+
+class ErrorBudget(NamedTuple):
+    """Per-round error budget: eq. (19)/(21)/(24) split into the paper
+    abstract's five aggregation-error sources plus the scheduling
+    exclusion penalty (DESIGN.md §12). All leaves broadcast together;
+    in-scan each is a scalar per (arm, round).
+
+    The five error fields sum (in field order) to the Lemma-1 bound:
+    quantization, dim_reduction and noise are the pre-C² terms inside
+    eq. (19)'s parenthesis; reconstruction is the (C²−1)-excess the
+    decoding constant C(δ) multiplies onto them; sparsification is the
+    top-κ term outside C². ``scheduling`` is eq. (21)'s (1−β) penalty on
+    the R_t = 2L·B_t scale — zero under full participation, NOT part of
+    eq. (19)."""
+    quantization: jnp.ndarray      # 1 — the unit sign-quantization floor
+    dim_reduction: jnp.ndarray     # (1+δ)(D−κ)/(SD)·G²
+    noise: jnp.ndarray             # σ²/(ΣK_iβ_ib_t)²
+    reconstruction: jnp.ndarray    # (C²(δ)−1)·(the three terms above)
+    sparsification: jnp.ndarray    # Σβ_i(1+δ)(D−κ)/D·G²
+    scheduling: jnp.ndarray        # ΣK_iρ₁(1−β_i)/ΣK_i  (eq. 21 × 2L)
+
+    def total_error(self) -> jnp.ndarray:
+        """Eq. (19): the Lemma-1 aggregation-error bound (field-order
+        sum; the bitwise contract of ``lemma1_error_bound``)."""
+        return (self.quantization + self.dim_reduction + self.noise
+                + self.reconstruction + self.sparsification)
+
+    def rt(self) -> jnp.ndarray:
+        """Eq. (24): R_t = 2L·B_t — the P2 objective (DESIGN.md §10)."""
+        return self.scheduling + self.total_error()
+
+    def bt(self, L: float) -> jnp.ndarray:
+        """Eq. (21): B_t, the per-round term of Theorem 1."""
+        return self.rt() / (2.0 * L)
+
+
+def error_budget(c: AnalysisConstants, *, D, S, kappa, beta, k_weights,
+                 b_t, noise_var, delta=None) -> ErrorBudget:
+    """Eq. (19)/(21) as an ``ErrorBudget`` pytree (DESIGN.md §12).
+
+    ``beta``/``k_weights`` are (..., U) and reduce over the last axis;
+    every other argument broadcasts against the leading axes, so one call
+    covers a scalar round, a (rounds,) trajectory, an (arms, rounds)
+    grid, or the tuner's candidate axis. ``D``/``S``/``kappa`` may be
+    arrays; ``delta=None`` uses the static ``c.delta``/``c.C`` (the
+    engine path), an array δ routes through the traced C(δ)."""
+    beta = jnp.asarray(beta, jnp.float32)
+    k_weights = jnp.asarray(k_weights, jnp.float32)
+    D = jnp.asarray(D, jnp.float32)
+    S = jnp.asarray(S, jnp.float32)
+    kappa = jnp.asarray(kappa, jnp.float32)
+    if delta is None:
+        delta = jnp.float32(c.delta)
+        C2 = jnp.float32(c.C ** 2)
+    else:
+        delta = jnp.asarray(delta, jnp.float32)
+        C2 = reconstruction_constant_traced(delta) ** 2
+    G2 = jnp.float32(c.G ** 2)
+
+    s_beta = jnp.sum(beta, axis=-1)
+    s_k = jnp.sum(k_weights * beta, axis=-1)
+    K = jnp.sum(k_weights, axis=-1)
+    denom = s_k * jnp.asarray(b_t, jnp.float32)
+
+    quant = jnp.ones_like(C2 * denom)       # broadcast to the output shape
+    dim_red = (1.0 + delta) * (D - kappa) / (S * D) * G2 * quant
+    noise = (jnp.asarray(noise_var, jnp.float32)
+             / jnp.maximum(denom ** 2, 1e-30))
+    recon = (C2 - 1.0) * (quant + dim_red + noise)
+    sparse = s_beta * (1.0 + delta) * (D - kappa) / D * G2
+    sched = jnp.sum(k_weights * c.rho1 * (1.0 - beta), axis=-1) / K
+    shape = jnp.broadcast_shapes(quant.shape, dim_red.shape, noise.shape,
+                                 recon.shape, sparse.shape, sched.shape)
+    b = lambda x: jnp.broadcast_to(x, shape)
+    return ErrorBudget(quantization=b(quant), dim_reduction=b(dim_red),
+                       noise=b(noise), reconstruction=b(recon),
+                       sparsification=b(sparse), scheduling=b(sched))
+
+
+def lemma1_error_bound(c: AnalysisConstants, *, D, S, kappa, beta,
+                       k_weights, b_t, noise_var, delta=None):
+    """Eq. (19) — BY DEFINITION the field-order sum of the
+    ``ErrorBudget`` error terms, so the decomposition is bitwise-exact
+    (tests/test_theory.py)."""
+    return error_budget(c, D=D, S=S, kappa=kappa, beta=beta,
+                        k_weights=k_weights, b_t=b_t,
+                        noise_var=noise_var, delta=delta).total_error()
+
+
+def bt_term(c: AnalysisConstants, *, D, S, kappa, beta, k_weights, b_t,
+            noise_var, delta=None):
+    """Eq. (21): B_t."""
+    return error_budget(c, D=D, S=S, kappa=kappa, beta=beta,
+                        k_weights=k_weights, b_t=b_t,
+                        noise_var=noise_var, delta=delta).bt(c.L)
+
+
+def rt_objective(c: AnalysisConstants, *, D, S, kappa, beta, k_weights,
+                 b_t, noise_var, delta=None):
+    """Eq. (24): R_t = 2L·B_t — the joint-optimization objective."""
+    return error_budget(c, D=D, S=S, kappa=kappa, beta=beta,
+                        k_weights=k_weights, b_t=b_t,
+                        noise_var=noise_var, delta=delta).rt()
+
+
+def theorem1_rate(c: AnalysisConstants, *, T: int, f0_minus_fstar: float,
+                  bt_sum: float):
+    """Eq. (20): bound on (1/T) Σ ‖∇F‖²."""
+    lead = 2.0 * c.L / (T * (1.0 - c.rho2))
+    return lead * f0_minus_fstar + lead * bt_sum
+
+
+def theorem1_trajectory(c: AnalysisConstants, f0_minus_fstar,
+                        bt_series: jnp.ndarray) -> jnp.ndarray:
+    """The full expected-convergence-rate trajectory of Theorem 1: unroll
+    the descent recursion Δ_{t+1} = ρ₂·Δ_t + B_t from
+    Δ_0 = F(w_0) − F(w*), giving the per-round bound on
+    E[F(w_t) − F(w*)] (DESIGN.md §12).
+
+    ``bt_series`` is (..., T) with time on the LAST axis (the engine's
+    (arms, rounds) layout); leading axes are carried elementwise, so a
+    whole sweep's trajectories unroll in one scan. With constant B the
+    trajectory converges geometrically to ``error_floor_asymptote``."""
+    bt_series = jnp.asarray(bt_series, jnp.float32)
+    d0 = jnp.broadcast_to(jnp.asarray(f0_minus_fstar, jnp.float32),
+                          bt_series.shape[:-1])
+    rho2 = jnp.float32(c.rho2)
+
+    def step(delta, b):
+        nd = rho2 * delta + b
+        return nd, nd
+
+    _, traj = lax.scan(step, d0, jnp.moveaxis(bt_series, -1, 0))
+    return jnp.moveaxis(traj, 0, -1)
+
+
+def error_floor_asymptote(c: AnalysisConstants, bt):
+    """Steady state of the Theorem-1 recursion: lim_t Δ_t = B/(1−ρ₂) for
+    constant B_t = B — the scheme's irreducible error floor."""
+    return jnp.asarray(bt, jnp.float32) / (1.0 - c.rho2)

@@ -1,0 +1,144 @@
+"""Bound-driven design-parameter tuning (paper eq. 24; DESIGN.md §12).
+
+The companion joint-optimization line of work (arXiv:2104.03490,
+arXiv:2310.10089) selects design parameters by evaluating the predicted
+convergence bound, not by running training grids. ``tune_design`` does
+that for this repo's knobs: it sweeps (κ_c, S_c, decode budget)
+candidates over the closed-form objective R_t = 2L·B_t in ONE broadcast
+evaluation (the candidate axis rides ``repro.theory.bounds``'s array
+support — no Python loop, no retrace per candidate) and returns the
+Pareto frontier over (R_t, uplink symbols, decode FLOPs).
+
+What makes the sweep non-trivial: R_t alone is monotone — more
+measurements and a larger κ always shrink eq. (19). The real tradeoff
+enters through the RIP constant: sparser recovery from fewer measurements
+degrades δ, and C(δ) in eq. (46) blows up as δ → √2 − 1. ``delta_model``
+carries the standard Gaussian-RIP scaling δ ∝ √(κ·ln(e·D_c/κ)/S_c),
+one-point-calibrated against the Monte-Carlo estimator
+``core.measurement.rip_constant_estimate`` at a reference design
+(``calibrate_delta``), so for a fixed symbol budget there is an interior
+optimal κ_c: too small pays sparsification error, too large pays C(δ)².
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.theory.bounds import AnalysisConstants, error_budget
+
+
+def delta_model(kappa, s_c, d_chunk, *, calib: float = 1.0):
+    """Gaussian-RIP scaling δ(κ, S_c) = calib·√(κ·ln(e·D_c/κ)/S_c).
+
+    The standard sufficient condition for RIP-δ of an S_c×D_c i.i.d.
+    Gaussian ensemble at sparsity κ is S_c ≳ δ⁻²·κ·ln(e·D_c/κ); solving
+    for δ gives the model. ``calib`` absorbs the unknown universal
+    constant — fit it with ``calibrate_delta`` (DESIGN.md §12)."""
+    kappa = jnp.asarray(kappa, jnp.float32)
+    s_c = jnp.asarray(s_c, jnp.float32)
+    d_chunk = jnp.asarray(d_chunk, jnp.float32)
+    return calib * jnp.sqrt(kappa * jnp.log(math.e * d_chunk / kappa) / s_c)
+
+
+def calibrate_delta(d_chunk: int, *, kappa_ref: int, s_ref: int,
+                    n_trials: int = 32, seed: int = 1) -> float:
+    """One-point calibration of ``delta_model``: Monte-Carlo δ at a
+    reference (κ_ref, S_ref) via ``rip_constant_estimate`` (eq. 41),
+    divided by the model's uncalibrated value there."""
+    # deferred import: repro.core re-exports repro.theory names, so a
+    # module-scope core import would be circular (DESIGN.md §12)
+    from repro.core.measurement import make_phi, rip_constant_estimate
+    phi = make_phi(0, s_ref, d_chunk)
+    delta_ref = float(rip_constant_estimate(phi, kappa_ref,
+                                            n_trials=n_trials, seed=seed))
+    raw = float(delta_model(kappa_ref, s_ref, d_chunk, calib=1.0))
+    return delta_ref / raw
+
+
+def pareto_mask(objectives: np.ndarray) -> np.ndarray:
+    """Boolean non-dominated mask for an (N, M) minimize-all objective
+    matrix. A candidate is on the frontier iff no other candidate is ≤ in
+    every objective and < in at least one; non-finite rows never
+    qualify."""
+    obj = np.asarray(objectives, np.float64)
+    finite = np.all(np.isfinite(obj), axis=1)
+    # [j, i]: candidate j weakly/strictly better than candidate i
+    le = np.all(obj[:, None, :] <= obj[None, :, :], axis=-1)
+    lt = np.any(obj[:, None, :] < obj[None, :, :], axis=-1)
+    dominated = np.any(le & lt, axis=0)
+    return finite & ~dominated
+
+
+def tune_design(c: AnalysisConstants, *, D: int, d_chunk: int,
+                kappas: Sequence[int], measures: Sequence[int],
+                decode_iters: Sequence[int] = (10,),
+                k_weights, noise_var, b_t, beta=None,
+                calib: Optional[float] = None,
+                max_symbols: Optional[float] = None) -> Dict:
+    """Sweep the (κ_c, S_c, decode-iteration) design grid over the
+    closed-form R_t (eq. 24) in one broadcast evaluation (DESIGN.md §12).
+
+    The channel/scheduling context is a nominal operating point: β
+    (default: everyone scheduled), per-worker ``k_weights``, the power
+    scale ``b_t`` and receiver ``noise_var`` — the quantities the engine
+    logs per round, so a tuned design can be cross-checked against a
+    measured trajectory (benchmarks/theory_bench.py).
+
+    Returns a dict of (N,) arrays over the flattened grid: the candidate
+    axes (``kappa``/``measure``/``iters``), the modeled ``delta``, the
+    predicted ``rt`` (+inf where δ breaks eq. 46), per-round uplink
+    ``symbols`` (S_c + 1 magnitude symbol per chunk, DESIGN.md §4) and
+    decode ``flops``, the ``pareto`` frontier mask over
+    (rt, symbols, flops), and ``best`` — the argmin-R_t index, restricted
+    to ``symbols ≤ max_symbols`` when a budget is given. Raises
+    ``ValueError`` when no candidate is both RIP-feasible and within
+    budget — silently handing back a grid corner would let an infeasible
+    budget masquerade as a tuned design."""
+    k_weights = jnp.asarray(k_weights, jnp.float32)
+    beta = (jnp.ones_like(k_weights) if beta is None
+            else jnp.asarray(beta, jnp.float32))
+    if calib is None:
+        calib = calibrate_delta(d_chunk, kappa_ref=int(kappas[0]),
+                                s_ref=int(measures[-1]))
+    kg, sg, ig = np.meshgrid(np.asarray(kappas, np.float32),
+                             np.asarray(measures, np.float32),
+                             np.asarray(decode_iters, np.float32),
+                             indexing="ij")
+    kappa = jnp.asarray(kg.ravel())
+    s_c = jnp.asarray(sg.ravel())
+    iters = jnp.asarray(ig.ravel())
+
+    n_chunks = -(-D // d_chunk)
+    # RIP is a per-chunk property of the block-diagonal Φ (DESIGN.md §4);
+    # the error terms see the effective whole-vector totals n·κ_c / n·S_c
+    delta = delta_model(kappa, s_c, d_chunk, calib=calib)
+    budget = error_budget(c, D=D, S=n_chunks * s_c,
+                          kappa=jnp.minimum(n_chunks * kappa, float(D)),
+                          beta=beta, k_weights=k_weights, b_t=b_t,
+                          noise_var=noise_var, delta=delta)
+    rt = np.asarray(budget.rt(), np.float64)
+    symbols = n_chunks * (np.asarray(s_c, np.float64) + 1.0)
+    # per decode iteration: one projection + one back-projection GEMM
+    flops = (np.asarray(iters, np.float64)
+             * 4.0 * np.asarray(s_c, np.float64) * d_chunk * n_chunks)
+    mask = pareto_mask(np.stack([rt, symbols, flops], axis=1))
+    feasible = np.isfinite(rt)
+    if max_symbols is not None:
+        feasible &= symbols <= float(max_symbols)
+    if not feasible.any():
+        raise ValueError(
+            "tune_design: no candidate is RIP-feasible"
+            + (f" within max_symbols={max_symbols}"
+               if max_symbols is not None else "")
+            + " — widen the grid or raise the budget")
+    best = int(np.argmin(np.where(feasible, rt, np.inf)))
+    return {"kappa": np.asarray(kappa, np.int64),
+            "measure": np.asarray(s_c, np.int64),
+            "iters": np.asarray(iters, np.int64),
+            "delta": np.asarray(delta),
+            "rt": rt, "symbols": symbols, "flops": flops,
+            "pareto": mask, "best": best, "calib": float(calib),
+            "budget": budget}

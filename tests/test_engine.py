@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core import channel as chan
-from repro.core.error_floor import AnalysisConstants
+from repro.theory import AnalysisConstants
 from repro.core.obcsaa import OBCSAAConfig, simulate_round
 from repro.core.sparsify import topk_sparsify
 from repro.engine import EngineRun, FLConfig, make_arms, run_sweep

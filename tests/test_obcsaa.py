@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.error_floor import AnalysisConstants, lemma1_error_bound
+from repro.theory import AnalysisConstants, lemma1_error_bound
 from repro.core.measurement import (make_phi, reconstruction_constant,
                                     rip_constant_estimate)
 from repro.core.obcsaa import OBCSAAConfig, comm_stats, compress_chunks, simulate_round

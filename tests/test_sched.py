@@ -20,7 +20,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.error_floor import AnalysisConstants
+from repro.theory import AnalysisConstants
 from repro.kernels.prefix_eval import prefix_eval
 from repro.sched import (BatchedProblem, Problem, ScenarioConfig,
                          SchedConfig, admm_solve, admm_solve_batched,

@@ -4,7 +4,7 @@ tests/test_sched.py (DESIGN.md §10)."""
 import numpy as np
 import pytest
 
-from repro.core.error_floor import AnalysisConstants
+from repro.theory import AnalysisConstants
 from repro.sched.reference import (Problem, _rt, admm_solve, enumerate_solve,
                                    greedy_solve, optimal_bt)
 

@@ -8,9 +8,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import latest_step, restore, save
-from repro.core.error_floor import (AnalysisConstants, bt_term,
-                                    lemma1_error_bound, rt_objective,
-                                    theorem1_rate)
+from repro.theory import (AnalysisConstants, bt_term, lemma1_error_bound,
+                          rt_objective, theorem1_rate)
 from repro.data import load_mnist, partition_workers, token_stream
 from repro.optim import adam, momentum, sgd, with_error_feedback
 from repro.optim.schedules import cosine_decay, warmup_cosine

@@ -1,0 +1,314 @@
+"""Closed-form convergence analytics (repro.theory, DESIGN.md §12).
+
+The load-bearing claims:
+- the ``ErrorBudget`` error terms sum — bitwise, in field order — to
+  ``lemma1_error_bound`` (eq. 19), and the budget is monotone the way
+  Remark 1 says: increasing in σ², decreasing in κ and S;
+- the traced C(δ) matches the scalar eq. (46) on the valid range and
+  returns +inf past δ = √2 − 1 instead of raising;
+- the tuner's single broadcast evaluation over the candidate grid equals
+  a per-candidate Python-loop reference, and its Pareto frontier is a
+  true non-dominated set;
+- the engine threads the budget as dense scan outputs (run_sweep
+  ``rt_bound``/``budget`` per arm-round) with the measured-error probe
+  matching a host-side recomputation, and the probe is measure-zero on
+  the training trajectory when enabled/disabled.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.measurement import reconstruction_constant
+from repro.core.obcsaa import OBCSAAConfig
+from repro.engine import FLConfig, run_sweep
+from repro.engine.core import perfect_aggregate, stacked_grads
+from repro.fl import FederatedTrainer
+from repro.theory import (AnalysisConstants, DELTA_MAX, ErrorBudget,
+                          bt_term, delta_model, error_budget,
+                          error_floor_asymptote, lemma1_error_bound,
+                          pareto_mask, reconstruction_constant_traced,
+                          rt_objective, theorem1_trajectory, tune_design)
+
+U = 4
+COMMON = dict(D=50890, S=13312, kappa=1040,
+              k_weights=np.full(10, 3000.0), b_t=0.001, noise_var=1e-4)
+
+
+# --- budget decomposition ---------------------------------------------------------
+
+def test_budget_terms_sum_to_lemma1_bitwise():
+    c = AnalysisConstants()
+    b = error_budget(c, beta=np.ones(10), **COMMON)
+    total = (b.quantization + b.dim_reduction + b.noise
+             + b.reconstruction + b.sparsification)
+    l1 = lemma1_error_bound(c, beta=np.ones(10), **COMMON)
+    assert np.array_equal(np.asarray(total), np.asarray(l1))
+    # every error source contributes a strictly positive share
+    for f in ("quantization", "dim_reduction", "noise", "reconstruction",
+              "sparsification"):
+        assert float(getattr(b, f)) > 0.0, f
+    # full participation -> no scheduling penalty; rt = 2L·bt
+    assert float(b.scheduling) == 0.0
+    assert float(b.rt()) == pytest.approx(
+        2.0 * c.L * float(b.bt(c.L)), rel=1e-6)
+
+
+def test_bound_monotone_in_sigma_and_sparsity():
+    """Remark 1 + the σ² direction: the bound grows with noise and with
+    the discarded fraction (D−κ)/D, shrinks with measurements S."""
+    c = AnalysisConstants()
+    beta = np.ones(10)
+
+    def at(**kw):
+        args = dict(COMMON, **kw)
+        return float(lemma1_error_bound(c, beta=beta, **args))
+
+    base = at()
+    # total: strong contrast (f32 — a tiny σ² shift vanishes next to the
+    # G² terms); the noise field itself is strictly monotone at any scale
+    assert at(noise_var=10.0) > base >= at(noise_var=1e-8)
+    n_lo = error_budget(c, beta=beta, **dict(COMMON, noise_var=1e-8)).noise
+    n_hi = error_budget(c, beta=beta, **dict(COMMON, noise_var=1e-2)).noise
+    assert float(n_hi) > float(n_lo) > 0.0
+    assert at(kappa=520) > base > at(kappa=5200)        # larger (D−κ)/D
+    assert at(S=6656) > base > at(S=26624)              # fewer measurements
+    # scheduling exclusion penalty appears when β drops workers
+    b_part = error_budget(c, beta=np.r_[np.ones(5), np.zeros(5)], **COMMON)
+    assert float(b_part.scheduling) > 0.0
+
+
+def test_theorem1_trajectory_converges_to_error_floor():
+    c = AnalysisConstants(rho2=0.5)
+    bt = 0.2
+    traj = theorem1_trajectory(c, 5.0, jnp.full((3, 60), bt))
+    assert traj.shape == (3, 60)
+    floor = float(error_floor_asymptote(c, bt))
+    # monotone decay onto the floor from above (Δ0 > floor)
+    t0 = np.asarray(traj[0])
+    assert np.all(np.diff(t0) <= 1e-6)
+    assert t0[-1] == pytest.approx(floor, rel=1e-5)
+    assert np.all(t0 >= floor - 1e-6)
+
+
+def test_traced_recon_constant_matches_scalar_and_caps():
+    deltas = [0.05, 0.2, 0.4]
+    traced = np.asarray(reconstruction_constant_traced(np.array(deltas)))
+    for d, t in zip(deltas, traced):
+        assert t == pytest.approx(reconstruction_constant(d), rel=1e-5)
+    bad = np.asarray(reconstruction_constant_traced(
+        np.array([DELTA_MAX, 0.6, 1.5])))
+    assert np.all(np.isinf(bad))
+
+
+# --- tuner ------------------------------------------------------------------------
+
+def test_vmapped_tuner_matches_python_loop_reference():
+    """The tuner's one broadcast R_t evaluation over the (κ, S) grid ==
+    looping scalar ``rt_objective`` calls per candidate."""
+    c = AnalysisConstants(G=2.0)
+    D, d_chunk = 50890, 4096
+    kappas, measures = [20, 80, 320, 1280], [256, 1024]
+    kw = np.full(U, 3000.0)
+    res = tune_design(c, D=D, d_chunk=d_chunk, kappas=kappas,
+                      measures=measures, decode_iters=[10], k_weights=kw,
+                      noise_var=1e-4, b_t=0.001, calib=0.3)
+    n_chunks = -(-D // d_chunk)
+    for i in range(len(res["rt"])):
+        k, s = int(res["kappa"][i]), int(res["measure"][i])
+        d = float(delta_model(k, s, d_chunk, calib=0.3))
+        assert d == pytest.approx(float(res["delta"][i]), rel=1e-6)
+        if d >= DELTA_MAX:
+            assert np.isinf(res["rt"][i])
+            continue
+        ref = rt_objective(c, D=D, S=n_chunks * s,
+                           kappa=min(n_chunks * k, D),
+                           beta=np.ones(U), k_weights=kw, b_t=0.001,
+                           noise_var=1e-4, delta=d)
+        assert float(ref) == pytest.approx(res["rt"][i], rel=1e-5), (k, s)
+
+
+def test_tuner_pareto_frontier_is_nondominated():
+    c = AnalysisConstants(G=2.0)
+    res = tune_design(c, D=50890, d_chunk=4096,
+                      kappas=[20, 80, 320, 1280], measures=[256, 1024],
+                      decode_iters=[5, 25], k_weights=np.full(U, 3000.0),
+                      noise_var=1e-4, b_t=0.001, calib=0.3,
+                      max_symbols=13 * 1025)
+    obj = np.stack([res["rt"], res["symbols"], res["flops"]], axis=1)
+    mask = res["pareto"]
+    assert mask.any()
+    assert np.all(np.isfinite(obj[mask]))
+    for i in np.flatnonzero(mask):        # no frontier point dominated
+        dominated = np.any(
+            np.all(obj <= obj[i], axis=1) & np.any(obj < obj[i], axis=1))
+        assert not dominated
+    # every dominated candidate has a frontier witness
+    front = obj[mask]
+    for i in np.flatnonzero(~mask & np.all(np.isfinite(obj), axis=1)):
+        assert np.any(np.all(front <= obj[i], axis=1)
+                      & np.any(front < obj[i], axis=1))
+    # the budgeted best is feasible and within the symbol budget
+    b = res["best"]
+    assert np.isfinite(res["rt"][b]) and res["symbols"][b] <= 13 * 1025
+
+
+def test_pareto_mask_basic():
+    obj = np.array([[1.0, 1.0], [2.0, 2.0], [0.5, 3.0], [np.inf, 0.0]])
+    assert list(pareto_mask(obj)) == [True, False, True, False]
+
+
+def test_tuner_raises_when_budget_infeasible():
+    """An unsatisfiable symbol budget must not silently select a grid
+    corner (−1 or None both index numpy arrays without error) — the
+    tuner refuses loudly."""
+    c = AnalysisConstants(G=2.0)
+    with pytest.raises(ValueError, match="RIP-feasible"):
+        tune_design(c, D=50890, d_chunk=4096, kappas=[20, 80],
+                    measures=[256, 1024], k_weights=np.full(U, 3000.0),
+                    noise_var=1e-4, b_t=0.001, calib=0.3, max_symbols=10)
+
+
+# --- engine integration -----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def task():
+    """The synthetic regression task of tests/test_engine.py."""
+    d_in, d_out, n = 24, 8, 16
+    key = jax.random.PRNGKey(7)
+    kw, kx, kn = jax.random.split(key, 3)
+    w_star = jax.random.normal(kw, (d_in, d_out))
+    x = jax.random.normal(kx, (U, n, d_in))
+    y = jnp.einsum("ukd,dc->ukc", x, w_star) \
+        + 0.01 * jax.random.normal(kn, (U, n, d_out))
+    wd = {"x": x, "y": y}
+    params0 = {"w": jnp.zeros((d_in, d_out))}
+
+    def loss_fn(p, data):
+        pred = data["x"] @ p["w"]
+        return jnp.mean((pred - data["y"]) ** 2)
+
+    return wd, params0, loss_fn
+
+
+def _cfg(**kw):
+    base = dict(
+        aggregator="obcsaa", scheduler="greedy_batched", rounds=8,
+        eval_every=4, learning_rate=0.3,
+        obcsaa=OBCSAAConfig(chunk=64, measure=32, topk=8, biht_iters=4,
+                            recon_alg="iht", recon_tau=0.25),
+        const=AnalysisConstants(rho1=200.0, G=1.0))
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_run_sweep_emits_dense_budget_and_bound_dominates(task):
+    """run_sweep returns per-arm-round ErrorBudget leaves + rt_bound and,
+    with the probe on, the measured ‖ĝ−ḡ‖² — with the predicted bound
+    dominating the measurement at every round of every arm."""
+    wd, params0, loss_fn = task
+    out = run_sweep(_cfg(probe_agg_error=True), loss_fn, params0, wd,
+                    np.full(U, 16.0), rounds=6,
+                    noise_var=[1e-6, 1e-2])
+    assert isinstance(out["budget"], ErrorBudget)
+    for leaf in out["budget"]:
+        assert leaf.shape == (2, 6)
+    assert out["rt_bound"].shape == (2, 6)
+    assert out["agg_err"].shape == (2, 6)
+    assert np.all(np.isfinite(out["rt_bound"]))
+    assert np.all(out["rt_bound"] >= out["agg_err"])
+    # budget identity holds on the engine-emitted leaves too
+    b = out["budget"]
+    np.testing.assert_array_equal(
+        b.quantization + b.dim_reduction + b.noise + b.reconstruction
+        + b.sparsification + b.scheduling, out["rt_bound"])
+
+
+def test_budget_only_emitted_for_obcsaa(task):
+    """Eq. 19 models the 1-bit CS pipeline: non-obcsaa aggregators emit
+    no budget (no rt_bound key from run_sweep, NaN in SchedLog) while
+    the probe still measures their aggregation error."""
+    wd, params0, loss_fn = task
+    cfg = _cfg(aggregator="topk_aa", topk_dense=24, probe_agg_error=True)
+    out = run_sweep(cfg, loss_fn, params0, wd, np.full(U, 16.0),
+                    rounds=3, noise_var=[1e-6, 1e-2])
+    assert "rt_bound" not in out and "budget" not in out
+    assert out["agg_err"].shape == (2, 3)
+    tr = FederatedTrainer(cfg, loss_fn, params0, wd, np.full(U, 16.0))
+    tr.run(3)
+    assert np.all(np.isnan(tr.sched_trajectory["rt_bound"]))
+    assert np.all(np.isfinite(tr.sched_trajectory["agg_err"]))
+
+
+def test_probe_off_is_measure_zero_on_training(task):
+    """FLConfig.probe_agg_error only adds outputs: params, EF residual
+    and the dense scheduling stats are bitwise-unchanged with the probe
+    on vs off (the DESIGN.md §12 measure-zero contract), and off is the
+    default — the PR-4 parity suite runs against that default."""
+    wd, params0, loss_fn = task
+    outs = {}
+    for probe in (False, True):
+        tr = FederatedTrainer(_cfg(probe_agg_error=probe,
+                                   error_feedback=True),
+                              loss_fn, params0, wd, np.full(U, 16.0))
+        tr.run()
+        outs[probe] = tr
+    a, b = outs[False], outs[True]
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert np.array_equal(np.asarray(a._state.residual),
+                          np.asarray(b._state.residual))
+    traj_a, traj_b = a.sched_trajectory, b.sched_trajectory
+    np.testing.assert_array_equal(traj_a["n_scheduled"],
+                                  traj_b["n_scheduled"])
+    np.testing.assert_array_equal(traj_a["b_t"], traj_b["b_t"])
+    np.testing.assert_array_equal(traj_a["rt_bound"], traj_b["rt_bound"])
+    assert np.all(np.isnan(traj_a["agg_err"]))
+    assert np.all(np.isfinite(traj_b["agg_err"]))
+    assert FLConfig().probe_agg_error is False
+
+
+def test_probe_matches_host_computed_error(task):
+    """The in-scan ‖ĝ−ḡ‖² equals a host-side recomputation: ĝ recovered
+    from the SGD parameter step, ḡ from re-evaluating the stacked worker
+    gradients at the pre-round params (host reference path, so β is
+    observable per round)."""
+    wd, params0, loss_fn = task
+    cfg = _cfg(mode="host", probe_agg_error=True, rounds=4)
+    kw = jnp.full((U,), 16.0)
+    tr = FederatedTrainer(cfg, loss_fn, params0, wd, np.full(U, 16.0))
+    from repro.core.sparsify import flatten_pytree
+    for t in range(cfg.rounds):
+        params_before = tr.params
+        info = tr.run_round(t)
+        flat_b, _ = flatten_pytree(params_before)
+        flat_a, _ = flatten_pytree(tr.params)
+        ghat = (np.asarray(flat_b) - np.asarray(flat_a)) \
+            / cfg.learning_rate
+        grads = stacked_grads(loss_fn, params_before, wd)
+        ideal = np.asarray(perfect_aggregate(
+            grads, kw, jnp.asarray(info["beta"])))
+        expect = float(np.sum((ghat - ideal) ** 2))
+        got = tr.sched_logs[t].agg_err
+        assert got == pytest.approx(expect, rel=1e-3), t
+
+
+def test_host_and_scan_log_identical_theory_stats(task):
+    """rt_bound/agg_err in the dense SchedLog stream agree between the
+    scan engine and the host reference loop (the §11 parity convention
+    extended to the theory outputs)."""
+    wd, params0, loss_fn = task
+    logs = {}
+    for mode in ("scan", "host"):
+        tr = FederatedTrainer(_cfg(mode=mode, probe_agg_error=True),
+                              loss_fn, params0, wd, np.full(U, 16.0))
+        tr.run()
+        logs[mode] = tr.sched_trajectory
+    np.testing.assert_allclose(logs["scan"]["rt_bound"],
+                               logs["host"]["rt_bound"], rtol=1e-6)
+    np.testing.assert_allclose(logs["scan"]["agg_err"],
+                               logs["host"]["agg_err"], rtol=1e-5)
