@@ -1,5 +1,16 @@
 """Microbenchmarks of the OBCSAA compression pipeline (jnp path on CPU;
-the Pallas kernels are structural/TPU-targeted and validated in tests)."""
+the Pallas kernels are structural/TPU-targeted and validated in tests).
+
+Packed-codec rows (DESIGN.md §13): each geometry runs the f32 ±1 and the
+uint32 bit-packed compress side by side and reports
+
+- ``packed_bitwise`` — unpack(packed signs) == f32 signs, elementwise.
+  This is a DETERMINISTIC flag (CI greps it; timing ratios are
+  load-sensitive and never gate anything).
+- ``bytes_f32`` / ``bytes_packed`` / ``wire_ratio`` — measurement-symbol
+  bytes moved on the uplink per worker per round (static accounting, the
+  32x the codec exists for).
+"""
 from __future__ import annotations
 
 import time
@@ -7,7 +18,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.obcsaa import OBCSAAConfig, compress_chunks, reconstruct_chunks
+from repro.core.obcsaa import (OBCSAAConfig, compress_chunks,
+                               reconstruct_chunks)
+from repro.kernels.sign import unpack_signs
 
 
 def timeit(f, *args, reps=5):
@@ -23,12 +36,25 @@ def main():
     rows = []
     for D in (1 << 16, 1 << 20):
         cfg = OBCSAAConfig(chunk=4096, measure=1024, topk=409, biht_iters=10)
+        cfg_p = OBCSAAConfig(chunk=4096, measure=1024, topk=409,
+                             biht_iters=10, packed=True)
         g = jax.random.normal(jax.random.PRNGKey(0), (D,))
         comp = jax.jit(lambda g: compress_chunks(cfg, g))
         us = timeit(comp, g)
         rows.append((f"kernels/compress_D{D}", us,
                      f"ratio={D / (D // cfg.chunk * cfg.measure):.2f}"))
         signs, mags = comp(g)
+        comp_p = jax.jit(lambda g: compress_chunks(cfg_p, g))
+        us_p = timeit(comp_p, g)
+        packed, _ = comp_p(g)
+        bitwise = bool(jnp.all(unpack_signs(packed) == signs))
+        n_sym = signs.shape[0] * cfg.measure
+        bytes_f32 = 4 * n_sym
+        bytes_packed = n_sym // 8
+        rows.append((f"kernels/compress_packed_D{D}", us_p,
+                     f"packed_bitwise={bitwise};bytes_f32={bytes_f32};"
+                     f"bytes_packed={bytes_packed};"
+                     f"wire_ratio={bytes_f32 / bytes_packed:.1f}"))
         rec = jax.jit(lambda y, m: reconstruct_chunks(cfg, y, m))
         us = timeit(rec, signs, mags)
         rows.append((f"kernels/biht10_D{D}", us, ""))

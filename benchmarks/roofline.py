@@ -79,8 +79,30 @@ def analyze(rec: dict) -> dict:
     }
 
 
-def main():
+def signal_path_rows():
+    """Bytes moved through the 1-bit signal path, f32 vs packed codec
+    (DESIGN.md §13) — STATIC accounting from the paper geometry, no
+    dry-run artifacts needed, so the flags are deterministic for CI.
+
+    Projection writes the sign measurements (f32 4 B/sym → packed
+    1/8 B/sym: 32x); backprojection reads the sign-consistency residual
+    (f32 4 B/sym → two uint32 bit-planes, 1/4 B/sym: 16x). Both clear the
+    ≥4x reduction bar (``ge4`` flag)."""
     rows = []
+    n_chunks, S = 13, 1024          # paper §V: D=50,890, D_c=4096, S_c=1024
+    n_sym = n_chunks * S
+    for name, f32_b, packed_b in (
+            ("projection_out", 4 * n_sym, n_sym // 8),
+            ("backprojection_resid_in", 4 * n_sym, 2 * (n_sym // 8))):
+        ratio = f32_b / packed_b
+        rows.append((f"roofline/signal_bytes/{name}", float(packed_b),
+                     f"bytes_f32={f32_b};bytes_packed={packed_b};"
+                     f"ratio={ratio:.1f};ge4={ratio >= 4.0}"))
+    return rows
+
+
+def main():
+    rows = signal_path_rows()
     for arch in ASSIGNED_ARCHS:
         for shape in INPUT_SHAPES:
             for mesh_tag in ("single",):

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import channel as chan
 from repro.core.measurement import make_phi
-from repro.core.quantize import sign_pm1
+from repro.core.quantize import PACK, pack_signs, sign_pm1, unpack_signs
 from repro.core.sparsify import topk_sparsify, topk_sparsify_bisect
 from repro.decode import DecodeConfig
 from repro.decode import decode as cs_decode
@@ -66,6 +66,22 @@ class OBCSAAConfig:
     # error-feedback splits and the decoder's hard threshold.
     bisect_iters: int = 40
     use_kernels: bool = False    # Pallas kernels (interpret on CPU)
+    # Packed 1-bit codec (DESIGN.md §13): compress emits uint32 words (32
+    # signs each) instead of f32 ±1 symbols, and the shard-mapped MAC
+    # accumulates them as exact int32 bit-counts before the power scale —
+    # 32x less uplink signal traffic, bit-for-bit equal to the f32 path.
+    # Requires measure % 32 == 0 and uniform K_i·b_t on the wire path.
+    packed: bool = False
+    # Fixed-step decode stability guard (DESIGN.md §13): "off" | "raise" |
+    # "fallback" — checks τ against the restricted spectral estimate of Φ
+    # before running the iht family (divergence would silently return NaN).
+    decode_validate: str = "off"
+
+    def __post_init__(self):
+        if self.packed and self.measure % PACK:
+            raise ValueError(
+                f"OBCSAAConfig(packed=True) needs measure (S_c) to be a "
+                f"multiple of {PACK}; got {self.measure} (DESIGN.md §13)")
 
     def phi(self, dtype=jnp.float32):
         return make_phi(self.phi_seed, self.measure, self.chunk, dtype)
@@ -92,7 +108,8 @@ class OBCSAAConfig:
         return DecodeConfig(algorithm=alg, iters=self.biht_iters,
                             tau=self.recon_tau, use_kernels=self.use_kernels,
                             ht="bisect" if self.spmd_topk else "sort",
-                            ht_iters=self.bisect_iters)
+                            ht_iters=self.bisect_iters,
+                            validate=self.decode_validate)
 
 
 # --- compression core (per worker) ---------------------------------------------
@@ -102,7 +119,10 @@ def compress_chunks(cfg: OBCSAAConfig, flat: jnp.ndarray, phi=None,
     """Per-worker compression C(g) = sign(Φ sparse_κ(g)) (eq. 6-7), chunked.
 
     flat: (D_pad,) with D_pad % chunk == 0, or pre-chunked (n, chunk).
-    Returns (signs (n_chunks, S_c), mags (n_chunks,)).
+    Returns (signs (n_chunks, S_c), mags (n_chunks,)) — with
+    ``cfg.packed``, signs is instead uint32 (n_chunks, S_c//32): the sign
+    epilogue packs 32 symbols per word via the shared ``x >= 0`` predicate,
+    so unpacking reproduces the f32 symbols bit for bit (DESIGN.md §13).
 
     ``presparsified=True`` asserts the input is already the top-κ sparse
     vector and skips the selection — the engine's error-feedback path
@@ -113,7 +133,8 @@ def compress_chunks(cfg: OBCSAAConfig, flat: jnp.ndarray, phi=None,
     if cfg.use_kernels:
         from repro.kernels import ops as kops
         sparse = gc if presparsified else kops.topk_select(gc, cfg.topk)[0]
-        signs = kops.cs_project_sign(phi, sparse)
+        signs = (kops.cs_project_pack(phi, sparse) if cfg.packed
+                 else kops.cs_project_sign(phi, sparse))
     else:
         if presparsified:
             sparse = gc
@@ -122,7 +143,8 @@ def compress_chunks(cfg: OBCSAAConfig, flat: jnp.ndarray, phi=None,
                                              iters=cfg.bisect_iters)
         else:
             sparse, _ = topk_sparsify(gc, cfg.topk)
-        signs = sign_pm1(jnp.einsum("sd,nd->ns", phi, sparse))
+        proj = jnp.einsum("sd,nd->ns", phi, sparse)
+        signs = pack_signs(proj) if cfg.packed else sign_pm1(proj)
     mags = jnp.linalg.norm(sparse, axis=-1)
     return signs, mags
 
@@ -172,8 +194,14 @@ def simulate_round(cfg: OBCSAAConfig, grads_flat: jnp.ndarray,
     signs, mags = jax.vmap(
         lambda g: compress_chunks(cfg, g, phi,
                                   presparsified=presparsified))(gpad)
+    # MAC superposition (eq. 12). The packed codec unpacks to the exact
+    # ±1 floats the f32 path produced (shared sign predicate, DESIGN.md
+    # §13), so the identical einsum keeps the two paths bit-for-bit equal;
+    # the wire-level int32 bit-count MAC lives in the shard-mapped path
+    # (collectives.psum_bits_mac).
+    symbols = unpack_signs(signs) if cfg.packed else signs
     w = k_weights * beta * b_t                      # (U,)
-    y = jnp.einsum("u,ucs->cs", w.astype(signs.dtype), signs)
+    y = jnp.einsum("u,ucs->cs", w.astype(symbols.dtype), symbols)
     nv = cfg.noise_var if noise_var is None else noise_var
     noise = chan.draw_noise(key, y.shape, nv)
     y = y + noise                                   # eq. (12)
@@ -205,11 +233,22 @@ def shardmap_compress(cfg: OBCSAAConfig, local_flat: jnp.ndarray,
     Returns ``(y, ksum, mag_sum)``: the raw received aggregate, the
     weight normaliser Σ_i K_i β_i, and the weighted magnitude sum (None
     unless ``cfg.magnitude_tracking``) — everything the PS-side
-    ``shardmap_reconstruct`` needs."""
+    ``shardmap_reconstruct`` needs.
+
+    With ``cfg.packed`` the wire carries uint32 words (32 signs each) and
+    the superposition is the exact int32 bit-count MAC
+    (``collectives.psum_bits_mac``): y = K·b_t · Σ_i β_i·(2·bit_i − 1),
+    assuming the worker-uniform K_i·b_t of the shard-mapped trainer
+    (equal-sized shards; DESIGN.md §13). ``wire_dtype`` is ignored on the
+    packed path — the symbols are already 1-bit."""
     signs, mags = compress_chunks(cfg, local_flat, phi)
-    wd = wire_dtype or signs.dtype
-    w = (k_weight * beta_i * b_t).astype(wd)
-    y = coll.psum(signs.astype(wd) * w, worker_axes)    # eq. (12)
+    if cfg.packed:
+        s_int = coll.psum_bits_mac(signs, worker_axes, beta_i=beta_i)
+        y = s_int.astype(jnp.float32) * (k_weight * b_t)  # eq. (12)
+    else:
+        wd = wire_dtype or signs.dtype
+        w = (k_weight * beta_i * b_t).astype(wd)
+        y = coll.psum(signs.astype(wd) * w, worker_axes)    # eq. (12)
     ksum = coll.psum(k_weight * beta_i, worker_axes)
     mag_sum = (coll.psum(mags * (k_weight * beta_i).astype(mags.dtype),
                          worker_axes)
@@ -253,10 +292,19 @@ def comm_stats(cfg: OBCSAAConfig, D: int) -> dict:
     n_chunks = -(-D // cfg.chunk)
     symbols = n_chunks * cfg.measure + (n_chunks if cfg.magnitude_tracking
                                         else 0)
+    # packed codec wire accounting (DESIGN.md §13): 1 bit per sign symbol
+    # vs 32 for the f32 representation; the per-chunk magnitude scalar
+    # stays a 32-bit float in both codecs
+    mag_bits = 32 * n_chunks if cfg.magnitude_tracking else 0
+    bits_f32 = 32 * n_chunks * cfg.measure + mag_bits
+    bits_packed = n_chunks * cfg.measure + mag_bits
     return {
         "D": D,
         "n_chunks": n_chunks,
         "symbols_per_round": symbols,
         "compression_ratio": D / symbols,
         "latency_fraction": symbols / D,   # same-bandwidth transmission time
+        "uplink_bits_f32": bits_f32,
+        "uplink_bits_packed": bits_packed,
+        "packed_wire_ratio": bits_f32 / bits_packed,
     }

@@ -1,16 +1,17 @@
 """1-bit quantization (paper eq. 7): C(g) = sign(Φ sparse_κ(g)).
 
 sign(0) is mapped to +1 so every transmitted symbol is ±1 — required for the
-gradient-independent power constraint (eq. 11).
+gradient-independent power constraint (eq. 11). The predicate lives in ONE
+place — ``repro.kernels.sign`` — and is re-exported here along with the
+32-per-uint32 packed codec (``pack_signs``/``unpack_signs``) that
+``OBCSAAConfig(packed=True)`` transmits on the wire (DESIGN.md §13).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-
-def sign_pm1(x: jnp.ndarray) -> jnp.ndarray:
-    """Strict ±1 sign (never 0)."""
-    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+from repro.kernels.sign import (PACK, pack_signs, sign_pm1,  # noqa: F401
+                                unpack_signs)
 
 
 def quantization_error_bound(S: int, D: int, kappa: int, G: float,

@@ -25,7 +25,9 @@ import jax.numpy as jnp
 from repro.kernels import backproject as _bp
 from repro.kernels import cs_project as _cs
 from repro.kernels import topk_select as _tk
+from repro.kernels import ops as kops
 from repro.kernels.ops import _interpret
+from repro.kernels.sign import unpack_signs
 
 
 def _round_up(n: int, mult: int) -> int:
@@ -79,3 +81,42 @@ def fused_iht(y: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int = 10,
 
     x, _ = jax.lax.scan(step, xp, None, length=iters)
     return x[:n]
+
+
+def fused_biht_packed(y_packed: jnp.ndarray, phi: jnp.ndarray, k: int,
+                      iters: int = 30, tau: float = 1.0,
+                      interpret=None) -> jnp.ndarray:
+    """BIHT on PACKED ±1 measurements — the packed 1-bit decode loop
+    (DESIGN.md §13).
+
+    y_packed: uint32 (n, S//32) from ``ops.cs_project_pack`` (or the
+    packed MAC); phi: (S, D); unit-norm rows out, like ``ops.biht``.
+
+    Each iteration runs the packed kernel pair with the modules' real
+    (non-full-extent) VMEM tiles: ``cs_project(mode="pack_sign_residual")``
+    consumes the fresh sign vector in-kernel and emits the two uint32
+    residual bit-planes; ``backproject_packed`` unpacks them in-tile to
+    the exact {−2, 0, +2} floats of the f32 residual. Same values through
+    the same ``dot_general`` tilings ⇒ bit-for-bit equal to ``ops.biht``
+    on the unpacked measurements, at 1/32 the measurement bytes and 1/16
+    the residual bytes through HBM. The one dense unpack is the x0 seed
+    (once, outside the loop)."""
+    interpret = _interpret() if interpret is None else interpret
+    S = phi.shape[0]
+    y_f = unpack_signs(y_packed, phi.dtype)          # x0 seed only
+    x0 = kops.backproject(
+        jnp.zeros((y_packed.shape[0], phi.shape[1]), phi.dtype), y_f, phi,
+        1.0 / S, interpret=interpret)
+    x, _ = kops.topk_select(x0, k, interpret=interpret)
+
+    def step(x, _):
+        plus, minus = kops.cs_pack_sign_residual(phi, x, y_packed,
+                                                 interpret=interpret)
+        x = kops.backproject_packed(x, plus, minus, phi, tau / S,
+                                    interpret=interpret)
+        x, _ = kops.topk_select(x, k, interpret=interpret)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, None, length=iters)
+    norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(norm, 1e-12)

@@ -58,6 +58,53 @@ def hard_threshold_bisect(x: jnp.ndarray, k: int,
     return topk_sparsify_bisect(x, k, iters=iters)[0]
 
 
+#: Divergence edge for the fixed-step update x ← η_κ(x + τΦᵀ(y − Φx)):
+#: on the iterate support the map is I − τΦ_TᵀΦ_T, whose spectrum stays in
+#: (−1, 1] iff τ·λ(Φ_TᵀΦ_T) < 2 — the classical gradient-descent bound.
+#: Measured: at κ̄ = S_c/2 the restricted estimate λ̂ ≈ 4.4 (S=512) / 5.0
+#: (S=1024), and the iterate blows up exactly where τ·λ̂ crosses 2
+#: (stable at 1.75, diverged at 2.005) — see tests/test_decode.py.
+IHT_STABILITY_BOUND = 2.0
+
+
+def restricted_spectral_estimate(phi: jnp.ndarray, k: int,
+                                 iters: int = 20) -> jnp.ndarray:
+    """λ̂ ≈ max λ(Φ_TᵀΦ_T) over k-sparse supports T — the quantity that
+    decides fixed-step IHT stability (DESIGN.md §13).
+
+    Hard-thresholded power iteration from a deterministic all-ones start:
+    v ← η_k(ΦᵀΦ v)/‖·‖. The fixed-step update x ← η_κ(x + τΦᵀ(y − Φx))
+    contracts on the iterate support only when τ·λ̂ < 2
+    (``IHT_STABILITY_BOUND``); at the default decode budget κ̄ = S_c/2 the
+    estimate is ≈4.4–5.0 for Gaussian Φ with the 1/S normalization, so the
+    edge sits at τ ≈ 0.4–0.46 — consistent with the conservatively pinned
+    τ = 0.25 and the silent divergence beyond it (CHANGES PR-2 note,
+    benchmarks/decoders_bench.py). Traceable (scan + top_k), so it also
+    runs under jit for the cond-based fallback."""
+    d = phi.shape[1]
+    s = min(k, d)
+
+    def step(v, _):
+        w = hard_threshold(jnp.einsum("sd,s->d", phi,
+                                      jnp.einsum("sd,d->s", phi, v)), s)
+        nrm = jnp.linalg.norm(w)
+        return w / jnp.maximum(nrm, 1e-30), None
+
+    v0 = jnp.full((d,), 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32)),
+                  phi.dtype)
+    v, _ = jax.lax.scan(step, v0, None, length=iters)
+    pv = jnp.einsum("sd,d->s", phi, v)
+    return jnp.sum(pv * pv) / jnp.maximum(jnp.sum(v * v), 1e-30)
+
+
+def iht_step_stable(phi: jnp.ndarray, k: int, tau: float,
+                    iters: int = 20) -> jnp.ndarray:
+    """Traced bool: is the fixed step τ below the restricted stability
+    edge τ·λ̂ < 2 (``IHT_STABILITY_BOUND``, DESIGN.md §13)?"""
+    return (restricted_spectral_estimate(phi, k, iters) * tau
+            < IHT_STABILITY_BOUND)
+
+
 def iht(y: jnp.ndarray, phi: jnp.ndarray, k: int, iters: int = 10,
         tau: float = 1.0, ht_fn=None, x0=None) -> jnp.ndarray:
     """Fixed-step IHT on real measurements (eq. 43). y: (..., S);

@@ -31,9 +31,11 @@ from dataclasses import dataclass
 from typing import Callable, Dict, Tuple
 
 from repro.dist.sharding import constrain
-from repro.decode.fused import fused_iht
-from repro.decode.iht import (biht_sign, hard_threshold,
-                              hard_threshold_bisect, iht, niht)
+from repro.decode.fused import fused_biht_packed, fused_iht
+from repro.decode.iht import (IHT_STABILITY_BOUND, biht_sign,
+                              hard_threshold, hard_threshold_bisect, iht,
+                              iht_step_stable, niht,
+                              restricted_spectral_estimate)
 
 
 @dataclass(frozen=True)
@@ -56,6 +58,19 @@ class DecodeConfig:
     ht: str = "sort"              # sort | bisect (SPMD-friendly threshold)
     ht_iters: int = 40            # bisect resolution budget (max·2^-iters)
     shard_axes: Tuple = ("model", None)   # chunk-dim mesh constraint
+    # Packed 1-bit measurements (DESIGN.md §13): ``y`` arrives as uint32
+    # words (32 signs each, kernels/sign.py codec). Only the sign-
+    # consistency ``biht`` family decodes packed symbols — the iht family
+    # consumes the real-valued post-MAC aggregate, which has no 1-bit form.
+    packed: bool = False
+    # Fixed-step stability guard (DESIGN.md §13): "off" | "raise" |
+    # "fallback". Checks τ·λ̂ < 2 (λ̂ = restricted spectral estimate of Φ
+    # at the decode sparsity) before dispatching the iht family; beyond
+    # the edge the iterate silently diverges to NaN. "raise" errors
+    # eagerly; "fallback" swaps in the adaptive-step NIHT (and is what
+    # "raise" degrades to under jit, where a data-dependent raise is
+    # impossible). "off" (default) keeps existing traces bitwise.
+    validate: str = "off"
 
 
 @dataclass(frozen=True)
@@ -97,15 +112,54 @@ def _ht_fn(cfg: DecodeConfig):
     raise ValueError(f"unknown hard-threshold {cfg.ht!r} (sort|bisect)")
 
 
+_FIXED_STEP = ("iht", "iht_warm", "iht_fused")
+_VALIDATE_MODES = ("off", "raise", "fallback")
+
+
 def decode(y, phi, k: int, cfg: DecodeConfig, x0=None):
     """Decode the post-processed aggregate ŷ (eq. 13) back to the sparse
-    gradient estimate (eq. 43). y: (n, S); phi: (S, D) -> (n, D).
+    gradient estimate (eq. 43). y: (n, S); phi: (S, D) -> (n, D). With
+    ``cfg.packed``, y is instead the uint32 packed sign words (n, S//32).
 
     ``x0`` is the warm-start iterate (round t−1's raw estimate); it is
-    forwarded only to warm-capable decoders."""
+    forwarded only to warm-capable decoders.
+
+    ``cfg.validate`` guards the fixed-step iht family against the silent
+    τ-divergence (DESIGN.md §13): eagerly it raises (or falls back to
+    NIHT) when τ·λ̂ ≥ 2; under jit both modes become a ``lax.cond``
+    between the requested decoder and NIHT."""
     dec = get_decoder(cfg.algorithm)
     y = constrain(y, cfg.shard_axes)
-    x = dec.fn(y, phi, k, cfg, x0 if dec.warm else None)
+    x0w = x0 if dec.warm else None
+    if cfg.validate not in _VALIDATE_MODES:
+        raise ValueError(f"unknown validate mode {cfg.validate!r}; one of "
+                         f"{_VALIDATE_MODES} (DESIGN.md §13)")
+    if cfg.validate != "off" and cfg.algorithm in _FIXED_STEP:
+        import jax
+        if isinstance(phi, jax.core.Tracer) or isinstance(y, jax.core.Tracer):
+            niht_fn = _REGISTRY["niht"].fn
+            # cfg/k are static — close over them; only arrays ride the cond
+            x = jax.lax.cond(
+                iht_step_stable(phi, k, cfg.tau),
+                lambda yy, pp, xx: dec.fn(yy, pp, k, cfg, xx),
+                lambda yy, pp, xx: niht_fn(yy, pp, k, cfg, None),
+                y, phi, x0w)
+            return constrain(x, cfg.shard_axes)
+        lam = float(restricted_spectral_estimate(phi, k))
+        if lam * cfg.tau >= IHT_STABILITY_BOUND:
+            if cfg.validate == "raise":
+                raise ValueError(
+                    f"decode: fixed-step IHT is unstable at tau={cfg.tau}: "
+                    f"tau·λ̂ = {cfg.tau * lam:.2f} ≥ {IHT_STABILITY_BOUND}, "
+                    f"with λ̂ = {lam:.2f} the restricted spectral estimate "
+                    f"of Φ at decode sparsity k={k} — the iterate diverges "
+                    f"to NaN. Lower tau below "
+                    f"{IHT_STABILITY_BOUND / lam:.3f}, use "
+                    f"validate='fallback', or the adaptive-step 'niht' "
+                    f"decoder (DESIGN.md §13).")
+            dec = _REGISTRY["niht"]
+            x0w = None
+    x = dec.fn(y, phi, k, cfg, x0w)
     return constrain(x, cfg.shard_axes)
 
 
@@ -135,6 +189,11 @@ def _niht(y, phi, k, cfg, x0):
 
 @register_decoder("biht")
 def _biht(y, phi, k, cfg, x0):
+    if cfg.packed:
+        if cfg.use_kernels:
+            return fused_biht_packed(y, phi, k, cfg.iters, cfg.tau)
+        from repro.kernels.sign import unpack_signs
+        y = unpack_signs(y, phi.dtype)
     if cfg.use_kernels:
         from repro.kernels import ops as kops
         return kops.biht(y, phi, k, cfg.iters, cfg.tau)

@@ -40,6 +40,26 @@ def psum(x, axes):
     return jax.lax.psum(x, _one_or_tuple(axes))
 
 
+def psum_bits_mac(packed, axes, *, beta_i=None):
+    """MAC superposition of PACKED 1-bit symbols (eq. 12, DESIGN.md §13).
+
+    ``packed``: uint32 (..., S//32), 32 signs per word (kernels/sign.py
+    codec). Each worker's per-lane contribution is β·(2·bit − 1) ∈
+    {−1, 0, +1} — per word that is the popcount identity
+    Σ_lanes sign = 2·popcount(w) − 32 — accumulated EXACTLY as int32
+    across the worker axes: integer superposition has no f32 rounding, so
+    the scaled result matches the f32 symbol psum bit for bit whenever
+    the (worker-uniform) power scale K·b_t makes ``scale·m`` exactly
+    representable. Returns the int32 per-lane signed sum (..., S); the
+    caller applies the uniform ``K·b_t`` scale AFTER the sum — per-worker
+    weights need the f32 wire."""
+    from repro.kernels.sign import unpack_bits
+    contrib = 2 * unpack_bits(packed, jnp.int32) - 1
+    if beta_i is not None:
+        contrib = contrib * beta_i.astype(jnp.int32)
+    return psum(contrib, axes)
+
+
 def pmean(x, axes):
     axes = norm_axes(axes)
     if not axes:

@@ -87,8 +87,18 @@ def topk_aa_aggregate(grads_flat, k_weights, beta, b_t, kappa, noise_var,
 
 def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
                  unflatten: Callable) -> EngineFns:
-    """Close the static experiment config over the round functions."""
+    """Close the static experiment config over the round functions.
+
+    ``ob.packed`` flows through unchanged: the scan round body's compress
+    emits uint32 sign words and the MAC unpacks them to the identical ±1
+    floats (DESIGN.md §13), so packed engine sweeps are bit-for-bit equal
+    to f32 sweeps (tests/test_packed.py). Validated here so a bad geometry
+    fails at build time, not inside a traced round."""
     ob = cfg.obcsaa
+    if ob.packed and cfg.aggregator == "obcsaa" and ob.measure % 32:
+        raise ValueError(
+            f"build_engine: packed 1-bit codec needs S_c % 32 == 0, got "
+            f"measure={ob.measure} (DESIGN.md §13)")
     n_chunks = -(-D // ob.chunk)
     pad = n_chunks * ob.chunk - D
     warm = cfg.aggregator == "obcsaa" and ob.warm_start

@@ -15,6 +15,7 @@ from repro.kernels import backproject as _bp
 from repro.kernels import cs_project as _cs
 from repro.kernels import topk_select as _tk
 from repro.kernels import ref as _ref
+from repro.kernels import sign as sign_codec
 
 
 def _interpret() -> bool:
@@ -36,6 +37,45 @@ def cs_project_sign(phi, chunks, interpret=None):
     chunks, n = _pad_rows(chunks, min(_cs.BN, max(1, chunks.shape[0])))
     out = _cs.project(phi, chunks, mode="sign", interpret=interpret)
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cs_project_pack(phi, chunks, interpret=None):
+    """Fused sign+pack compression (DESIGN.md §13): phi (S, D),
+    chunks (n, D) -> uint32 (n, S//32); bit = 1 ⇔ projection >= 0.
+
+    Unpacking the result reproduces ``cs_project_sign`` bit for bit —
+    both epilogues share the one sign predicate (kernels/sign.py)."""
+    interpret = _interpret() if interpret is None else interpret
+    chunks, n = _pad_rows(chunks, min(_cs.BN, max(1, chunks.shape[0])))
+    return _cs.project(phi, chunks, mode="pack", interpret=interpret)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cs_pack_sign_residual(phi, x, y_packed, interpret=None):
+    """Packed BIHT residual planes (DESIGN.md §13): the fresh sign(x Φᵀ)
+    is consumed in-kernel; returns (plus, minus) uint32 (n, S//32) with
+    resid = 2·(plus − minus)."""
+    interpret = _interpret() if interpret is None else interpret
+    bn = min(_cs.BN, max(1, x.shape[0]))
+    x, n = _pad_rows(x, bn)
+    y_packed, _ = _pad_rows(y_packed, bn)
+    plus, minus = _cs.project(phi, x, mode="pack_sign_residual", y=y_packed,
+                              interpret=interpret)
+    return plus[:n], minus[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "interpret"))
+def backproject_packed(x, plus, minus, phi, tau, interpret=None):
+    """x + tau * (2·(plus − minus)) @ phi with the bit-planes unpacked
+    in-tile (DESIGN.md §13)."""
+    interpret = _interpret() if interpret is None else interpret
+    bn = min(_bp.BN, max(1, x.shape[0]))
+    x, n = _pad_rows(x, bn)
+    plus, _ = _pad_rows(plus, bn)
+    minus, _ = _pad_rows(minus, bn)
+    return _bp.backproject_packed(x, plus, minus, phi, tau,
+                                  interpret=interpret)[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -1,17 +1,45 @@
-"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+``sign_pm1`` is re-exported from the canonical definition in
+``kernels/sign.py`` (sign(0) = +1; one shared helper repo-wide,
+DESIGN.md §13)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.sign import pack_bool, pack_signs, sign_pm1, unpack_bits
 
-def sign_pm1(x):
-    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+__all__ = ["sign_pm1", "cs_project_sign_ref", "cs_project_pack_ref",
+           "sign_residual_planes_ref", "topk_select_ref", "backproject_ref",
+           "biht_ref"]
 
 
 def cs_project_sign_ref(phi: jnp.ndarray, chunks: jnp.ndarray) -> jnp.ndarray:
     """phi: (S, D); chunks: (n, D) -> ±1 signs (n, S)."""
     return sign_pm1(jnp.einsum("sd,nd->ns", phi, chunks))
+
+
+def cs_project_pack_ref(phi: jnp.ndarray, chunks: jnp.ndarray) -> jnp.ndarray:
+    """Packed-codec oracle: phi (S, D); chunks (n, D) -> uint32 (n, S//32).
+
+    ``pack_signs`` applies the shared ``x >= 0`` predicate directly to the
+    projection, so this equals ``pack_signs(cs_project_sign_ref(...))``
+    bit for bit (DESIGN.md §13)."""
+    return pack_signs(jnp.einsum("sd,nd->ns", phi, chunks))
+
+
+def sign_residual_planes_ref(phi: jnp.ndarray, x: jnp.ndarray,
+                             y_packed: jnp.ndarray):
+    """Packed BIHT residual oracle -> (plus, minus) uint32 (n, S//32).
+
+    With ±1 measurements y, the sign-consistency residual y − sign(Φx)
+    takes values in {−2, 0, +2}; the two bit-planes record the +2 lanes
+    (y=+1, sign=−1) and −2 lanes (y=−1, sign=+1): resid = 2·(plus − minus)
+    (DESIGN.md §13)."""
+    yb = unpack_bits(y_packed, jnp.bool_)
+    sb = jnp.einsum("sd,nd->ns", phi, x) >= 0
+    return pack_bool(yb & ~sb), pack_bool(sb & ~yb)
 
 
 def topk_select_ref(chunks: jnp.ndarray, k: int):

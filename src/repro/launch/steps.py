@@ -306,6 +306,32 @@ def make_decode_step(model: Model) -> Callable:
     return step
 
 
+def make_seeded_prefill(model: Model, total_len: int) -> Callable:
+    """Prefill a prompt prefix and seed a ``total_len`` decode cache.
+
+    Returns ``step(params, batch) -> (logits, cache, offset)``: the
+    prefix (vlm image embeds + any prompt tokens) runs through the full
+    forward once, its per-layer KV seeds land in slots [0, offset) of a
+    fresh cache, and decoding continues at ``pos = offset + i``. This is
+    how vlm serving consumes the image prefix — decode steps are
+    text-only, so the image context must enter through the cache."""
+    from repro.models import transformer
+
+    cfg = model.cfg
+
+    def step(params, batch):
+        logits, seeds = model.prefill(params, batch)
+        img = batch.get("image_embeds")
+        offset = batch["tokens"].shape[1] + (
+            img.shape[1] if img is not None else 0)
+        cache = model.init_cache(batch["tokens"].shape[0], total_len)
+        cache = transformer.seed_cache_from_prefill(cfg, cache, seeds,
+                                                    start=0)
+        return logits, cache, offset
+
+    return step
+
+
 def cache_shardings(cache_shapes, mesh):
     """NamedShardings for a cache pytree (dict of arrays) via dim hints."""
     hints = cache_shardings_hints()

@@ -232,6 +232,31 @@ def init_lm_cache(cfg: ModelConfig, batch: int, seq_len: int):
     return cache
 
 
+def seed_cache_from_prefill(cfg: ModelConfig, cache, seeds, *,
+                            start: int = 0):
+    """Write prefill cache seeds into a zero decode cache at ``start``.
+
+    ``seeds`` is the scan-stacked tuple ``lm_forward(collect_cache=True)``
+    returns: per-layer ``(k, v)`` (GQA) or ``(ckv, kr)`` (MLA), each leaf
+    shaped (L, B, T, ...). The forward already applies RoPE to K at the
+    absolute positions 0..T-1 — identical values to what ``gqa_decode``
+    would have written token-by-token — so seeding the first T slots and
+    decoding from ``pos = start + T`` reproduces the full forward exactly
+    (tests/test_decode_consistency.py, the vlm image-prefix path)."""
+    fam = cfg.family
+    if fam not in ("dense", "vlm", "moe"):
+        raise NotImplementedError(
+            f"prefill cache seeding is attention-only; family {fam!r} "
+            "carries recurrent state that has no positional slot to seed")
+    names = ("ckv", "kr") if cfg.attention.use_mla else ("k", "v")
+    out = dict(cache)
+    for name, seed in zip(names, seeds):
+        at = (0, 0, start) + (0,) * (seed.ndim - 3)
+        out[name] = jax.lax.dynamic_update_slice(
+            cache[name], seed.astype(cache[name].dtype), at)
+    return out
+
+
 def cache_shardings_hints():
     """Dim hints for cache leaves: length over data, heads over model."""
     return {

@@ -80,6 +80,79 @@ def test_warm_state_withheld_from_cold_decoders():
     assert not np.array_equal(np.asarray(a), np.asarray(c))
 
 
+def test_validate_raise_catches_divergent_tau():
+    """Fixed-step IHT silently diverges past the restricted stability edge
+    τ·λ̂ ≥ 2 (DESIGN.md §13) — validate='raise' turns that into a
+    ValueError naming the measured λ̂ and the safe τ range."""
+    y, phi, _ = _measurements()
+    with pytest.raises(ValueError, match="unstable"):
+        decode(y, phi, 256, DecodeConfig(algorithm="iht", iters=30, tau=1.0,
+                                         validate="raise"))
+    # the divergence the guard prevents is real: unguarded it blows up
+    raw = decode(y, phi, 256, DecodeConfig(algorithm="iht", iters=30,
+                                           tau=1.0))
+    assert float(jnp.max(jnp.abs(raw))) > 1e6
+
+
+def test_validate_passes_stable_tau_bitwise():
+    """A stable τ decodes through the guard bit-identically to the
+    unguarded path — the guard is trace-invisible when it doesn't fire."""
+    y, phi, _ = _measurements()
+    a = decode(y, phi, 256, DecodeConfig(algorithm="iht", iters=30,
+                                         tau=0.25, validate="raise"))
+    b = decode(y, phi, 256, DecodeConfig(algorithm="iht", iters=30,
+                                         tau=0.25))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_validate_fallback_swaps_in_niht():
+    y, phi, _ = _measurements()
+    f = decode(y, phi, 256, DecodeConfig(algorithm="iht", iters=30, tau=1.0,
+                                         validate="fallback"))
+    n = decode(y, phi, 256, DecodeConfig(algorithm="niht", iters=30))
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(n))
+    assert bool(jnp.all(jnp.isfinite(f)))
+
+
+def test_validate_under_jit_is_a_cond():
+    """Traced decode cannot raise — both modes become a lax.cond between
+    the requested decoder and NIHT, selected by the traced predicate."""
+    y, phi, _ = _measurements()
+    n = decode(y, phi, 256, DecodeConfig(algorithm="niht", iters=30))
+    bad = jax.jit(lambda yy, pp: decode(yy, pp, 256, DecodeConfig(
+        algorithm="iht", iters=30, tau=1.0, validate="raise")))(y, phi)
+    np.testing.assert_array_equal(np.asarray(bad), np.asarray(n))
+    ok = jax.jit(lambda yy, pp: decode(yy, pp, 256, DecodeConfig(
+        algorithm="iht", iters=30, tau=0.25, validate="fallback")))(y, phi)
+    eager = decode(y, phi, 256, DecodeConfig(algorithm="iht", iters=30,
+                                             tau=0.25))
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(eager))
+
+
+def test_validate_unknown_mode_raises():
+    y, phi, _ = _measurements()
+    with pytest.raises(ValueError, match="validate"):
+        decode(y, phi, 64, DecodeConfig(algorithm="iht", validate="maybe"))
+
+
+def test_restricted_spectral_estimate_brackets_divergence():
+    """The guard's λ̂ is calibrated: the empirical blow-up τ sits inside
+    (1/λ̂ is safe, 2/λ̂ is the edge) — see IHT_STABILITY_BOUND."""
+    from repro.decode.iht import (IHT_STABILITY_BOUND, iht_step_stable,
+                                  restricted_spectral_estimate)
+    y, phi, x_true = _measurements()
+    lam = float(restricted_spectral_estimate(phi, 256))
+    assert 3.0 < lam < 6.0
+    safe_tau = 0.5 / lam
+    edge_tau = (IHT_STABILITY_BOUND + 0.5) / lam
+    assert bool(iht_step_stable(phi, 256, safe_tau))
+    assert not bool(iht_step_stable(phi, 256, edge_tau))
+    out = iht(y, phi, 256, iters=40, tau=safe_tau)
+    assert float(jnp.max(jnp.abs(out))) < 1e3
+    out = iht(y, phi, 256, iters=40, tau=edge_tau)
+    assert float(jnp.max(jnp.abs(out))) > 1e3
+
+
 def test_ht_bisect_matches_sort_on_generic_values():
     y, phi, _ = _measurements()
     a = decode(y, phi, 40, DecodeConfig(algorithm="iht", iters=6, tau=1.0,

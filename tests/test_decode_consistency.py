@@ -41,21 +41,31 @@ def test_decode_matches_forward(arch):
             0.02 * rng.normal(size=(B, cfg.encoder_seq_len, cfg.d_model)),
             jnp.float32)
     full_logits = model.forward(params, batch, remat=False)
+    offset = 0
     if cfg.family == "vlm":
-        pytest.skip("vlm decode consumes post-image positions; covered by "
-                    "the LM-only families (image prefix would need prefill "
-                    "cache seeding, exercised in dry-run)")
-    # step-by-step decode over the same tokens
-    cache = model.init_cache(B, S)
-    if cfg.family == "audio":
-        from repro.models import encdec
-        enc = encdec.encode(params, cfg, batch["frames"])
-        cache = encdec.seed_cross_cache(params, cfg, cache, enc)
+        # serve path: prefill the image prefix into the cache, then decode
+        # the text tokens at post-image positions — must reproduce the
+        # text slice of the full forward
+        from repro.launch.steps import make_seeded_prefill
+        n_img = cfg.num_image_tokens
+        seeded = make_seeded_prefill(model, n_img + S)
+        _, cache, offset = seeded(
+            params, {"tokens": tokens[:, :0],
+                     "image_embeds": batch["image_embeds"]})
+        assert offset == n_img
+        full_logits = full_logits[:, n_img:]
+    else:
+        # step-by-step decode over the same tokens
+        cache = model.init_cache(B, S)
+        if cfg.family == "audio":
+            from repro.models import encdec
+            enc = encdec.encode(params, cfg, batch["frames"])
+            cache = encdec.seed_cross_cache(params, cfg, cache, enc)
     dec = jax.jit(model.decode_step)
     outs = []
     for pos in range(S):
         logits, cache = dec(params, cache, tokens[:, pos:pos + 1],
-                            jnp.int32(pos))
+                            jnp.int32(offset + pos))
         outs.append(logits[:, 0])
     dec_logits = jnp.stack(outs, axis=1)
     a = np.asarray(full_logits, np.float32)

@@ -88,3 +88,56 @@ def test_distributed_equivalence_and_train_steps():
                        capture_output=True, text=True, timeout=560)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
     assert "OK" in r.stdout
+
+
+SCRIPT_PACKED_MAC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.collectives import psum_bits_mac
+    from repro.kernels.sign import pack_signs, unpack_signs
+
+    # 8 workers, one per device: the int32 packed-word MAC psum must equal
+    # the f32 einsum superposition of the unpacked +-1 symbols bit for bit
+    # (uniform power-of-two scale K*b_t => every partial sum is exact).
+    U, n, S = 8, 3, 256
+    mesh = jax.make_mesh((8,), ("data",))
+    key = jax.random.PRNGKey(0)
+    proj = jax.random.normal(key, (U, n, S))
+    packed = pack_signs(proj)                       # (U, n, S//32) uint32
+    symbols = unpack_signs(packed)                  # (U, n, S) +-1 f32
+    beta = (jax.random.uniform(jax.random.PRNGKey(1), (U,)) > 0.3)
+    beta = beta.astype(jnp.float32)
+    scale = jnp.float32(0.5)                        # K*b_t, power of two
+
+    y_ref = jnp.einsum("u,uns->ns", beta * scale, symbols)
+
+    def per_worker(pk, beta_all):
+        widx = jax.lax.axis_index("data")
+        s_int = psum_bits_mac(pk[0], ("data",), beta_i=beta_all[widx])
+        return s_int.astype(jnp.float32) * scale
+
+    f = jax.shard_map(per_worker, mesh=mesh, axis_names={"data"},
+                      in_specs=(P("data"), P()), out_specs=P(),
+                      check_vma=False)
+    with jax.set_mesh(mesh):
+        y_mac = jax.jit(f)(packed, beta)
+    assert y_mac.shape == y_ref.shape, (y_mac.shape, y_ref.shape)
+    assert bool(jnp.all(y_mac == y_ref)), "packed MAC psum != f32 einsum"
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_packed_mac_psum_matches_einsum_on_mesh():
+    """Worker-axis popcount-style MAC (DESIGN.md §13): int32 psum of
+    packed sign words == the f32 symbol superposition, bitwise."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", SCRIPT_PACKED_MAC], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "OK" in r.stdout

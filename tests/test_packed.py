@@ -1,0 +1,284 @@
+"""Bit-packed 1-bit uplink path (DESIGN.md §13).
+
+The packed codec (kernels/sign.py: 32 signs per uint32 word, LSB-first,
+bit = 1 ⇔ projection ≥ 0 ⇔ +1) must be bit-for-bit equal to the f32 ±1
+path through the whole pipeline — quantize → measure → MAC → decode —
+because pack applies the SAME ``x >= 0`` predicate as the sign epilogue
+and unpack reproduces the identical ±1.0 floats. These tests pin that
+contract, the sign(0) := +1 convention at every call site, the explicit
+shape-validation errors, and the 32x wire accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.obcsaa import OBCSAAConfig, comm_stats, compress_chunks, \
+    simulate_round
+from repro.core import quantize
+from repro.decode.fused import fused_biht_packed
+from repro.kernels import backproject as bp
+from repro.kernels import cs_project
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.sign import (PACK, pack_bool, pack_signs, packed_width,
+                                sign_pm1, unpack_bits, unpack_signs)
+
+
+def _proj_inputs(seed, n, s, d):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    phi = jax.random.normal(k1, (s, d)) / jnp.sqrt(jnp.float32(s))
+    chunks = jax.random.normal(k2, (n, d))
+    return phi, chunks
+
+
+# --- codec round trip ---------------------------------------------------------------
+
+class TestCodec:
+    def test_pack_unpack_roundtrip_property(self):
+        """unpack(pack(x)) == sign(x) elementwise for random floats,
+        including exact zeros and negative zeros."""
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((7, 4, 96)).astype(np.float32)
+        x[rng.random(x.shape) < 0.1] = 0.0
+        x[rng.random(x.shape) < 0.05] = -0.0
+        x = jnp.asarray(x)
+        packed = pack_signs(x)
+        assert packed.dtype == jnp.uint32
+        assert packed.shape == x.shape[:-1] + (x.shape[-1] // PACK,)
+        out = unpack_signs(packed)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(sign_pm1(x)))
+        # bool plane round trip
+        bits = x >= 0
+        np.testing.assert_array_equal(
+            np.asarray(unpack_bits(pack_bool(bits), jnp.int32)),
+            np.asarray(bits).astype(np.int32))
+
+    def test_pack_is_lsb_first(self):
+        """Word j covers lanes [32j, 32j+32), bit b = lane 32j+b."""
+        x = -jnp.ones((64,))
+        x = x.at[0].set(1.0).at[33].set(1.0)
+        w = np.asarray(pack_signs(x))
+        assert w[0] == 1 and w[1] == 2
+
+    def test_packed_width_requires_multiple_of_32(self):
+        assert packed_width(96) == 3
+        with pytest.raises(ValueError, match="32"):
+            packed_width(100)
+        with pytest.raises(ValueError, match="32"):
+            pack_signs(jnp.ones((4, 100)))
+
+
+# --- sign(0) convention --------------------------------------------------------------
+
+class TestSignZeroConvention:
+    """sign(0) := +1 (eq. 11 needs ±1 symbols — a 0 would transmit
+    nothing) from ONE shared helper at every call site."""
+
+    def test_sign_pm1_exact_zero_is_plus_one(self):
+        x = jnp.asarray([-1.5, -0.0, 0.0, 2.5, jnp.finfo(jnp.float32).tiny])
+        np.testing.assert_array_equal(np.asarray(sign_pm1(x)),
+                                      [-1.0, 1.0, 1.0, 1.0, 1.0])
+
+    def test_all_call_sites_share_the_convention(self):
+        """A zero gradient projects to exactly 0 everywhere: the kernel
+        epilogue, the einsum reference, the quantize helper and the packed
+        codec must all emit +1 for it."""
+        phi, _ = _proj_inputs(0, 4, 64, 256)
+        zeros = jnp.zeros((4, 256))
+        expect = np.ones((4, 64), np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(kops.cs_project_sign(phi, zeros)), expect)
+        np.testing.assert_array_equal(
+            np.asarray(ref.cs_project_sign_ref(phi, zeros)), expect)
+        np.testing.assert_array_equal(
+            np.asarray(quantize.sign_pm1(jnp.zeros((4, 64)))), expect)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_signs(kops.cs_project_pack(phi, zeros))),
+            expect)
+        # packed words for +1-everywhere are all-ones bit patterns
+        assert np.all(np.asarray(kops.cs_project_pack(phi, zeros))
+                      == np.uint32(0xFFFFFFFF))
+
+    def test_quantize_reexports_shared_helper(self):
+        from repro.kernels import sign as sign_mod
+        assert quantize.sign_pm1 is sign_mod.sign_pm1
+        assert ref.sign_pm1 is sign_mod.sign_pm1
+
+
+# --- Pallas kernel parity ------------------------------------------------------------
+
+class TestKernelParity:
+    def test_pack_kernel_matches_ref_and_f32_sign(self):
+        phi, chunks = _proj_inputs(1, 6, 128, 512)
+        packed = kops.cs_project_pack(phi, chunks)
+        np.testing.assert_array_equal(
+            np.asarray(packed), np.asarray(ref.cs_project_pack_ref(phi,
+                                                                   chunks)))
+        np.testing.assert_array_equal(
+            np.asarray(unpack_signs(packed)),
+            np.asarray(kops.cs_project_sign(phi, chunks)))
+
+    def test_residual_planes_match_ref(self):
+        phi, chunks = _proj_inputs(2, 5, 96, 256)
+        y_packed = kops.cs_project_pack(phi, chunks)
+        x = jax.random.normal(jax.random.PRNGKey(9), chunks.shape)
+        plus, minus = kops.cs_pack_sign_residual(phi, x, y_packed)
+        rp, rm = ref.sign_residual_planes_ref(phi, x, y_packed)
+        np.testing.assert_array_equal(np.asarray(plus), np.asarray(rp))
+        np.testing.assert_array_equal(np.asarray(minus), np.asarray(rm))
+        # planes are disjoint: a lane is never both +2 and -2
+        assert not np.any(np.asarray(plus) & np.asarray(minus))
+
+    def test_backproject_packed_matches_f32_backproject(self):
+        phi, chunks = _proj_inputs(3, 5, 96, 256)
+        y_packed = kops.cs_project_pack(phi, chunks)
+        x = jax.random.normal(jax.random.PRNGKey(10), chunks.shape)
+        plus, minus = kops.cs_pack_sign_residual(phi, x, y_packed)
+        resid = 2.0 * (unpack_bits(plus, jnp.float32)
+                       - unpack_bits(minus, jnp.float32))
+        # the equivalent f32 residual: y - sign(Φx) in {-2, 0, +2}
+        y_f = unpack_signs(y_packed)
+        sb = sign_pm1(jnp.einsum("sd,nd->ns", phi, x))
+        np.testing.assert_array_equal(np.asarray(resid), np.asarray(y_f - sb))
+        got = kops.backproject_packed(x, plus, minus, phi, 0.125)
+        want = kops.backproject(x, y_f - sb, phi, 0.125)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fused_biht_packed_bitwise_matches_f32_biht(self):
+        phi, chunks = _proj_inputs(4, 4, 128, 512)
+        sparse = kops.topk_select(chunks, 50)[0]
+        y = kops.cs_project_sign(phi, sparse)
+        y_packed = pack_signs(y)
+        a = fused_biht_packed(y_packed, phi, 50, iters=12, tau=1.0)
+        b = kops.biht(y, phi, 50, iters=12, tau=1.0)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_registry_biht_routes_packed(self):
+        from repro.decode import DecodeConfig, decode
+        phi, chunks = _proj_inputs(5, 3, 128, 512)
+        sparse = kops.topk_select(chunks, 40)[0]
+        y = kops.cs_project_sign(phi, sparse)
+        y_packed = pack_signs(y)
+        for use_kernels in (False, True):
+            cfg = DecodeConfig(algorithm="biht", iters=8, packed=True,
+                               use_kernels=use_kernels)
+            cfg_f = DecodeConfig(algorithm="biht", iters=8, packed=False,
+                                 use_kernels=use_kernels)
+            np.testing.assert_array_equal(
+                np.asarray(decode(y_packed, phi, 40, cfg)),
+                np.asarray(decode(y, phi, 40, cfg_f)))
+
+
+# --- end-to-end parity ---------------------------------------------------------------
+
+class TestEndToEndParity:
+    def _round(self, packed, use_kernels, *, D, chunk, measure, topk,
+               iters=3):
+        cfg = OBCSAAConfig(chunk=chunk, measure=measure, topk=topk,
+                           biht_iters=iters, packed=packed,
+                           use_kernels=use_kernels, noise_var=0.0)
+        U = 4
+        rng = np.random.default_rng(11)
+        n_chunks = -(-D // chunk)
+        grads = jnp.asarray(rng.standard_normal((U, n_chunks * chunk)),
+                            jnp.float32)
+        kw = jnp.ones((U,))
+        beta = jnp.ones((U,))
+        h = jnp.ones((U,))
+        ghat, diag = simulate_round(cfg, grads, kw, beta, jnp.float32(1.0),
+                                    h, jax.random.PRNGKey(3))
+        return ghat
+
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_simulate_round_packed_bitwise_equal(self, use_kernels):
+        kw = dict(D=4096, chunk=1024, measure=256, topk=64)
+        a = self._round(False, use_kernels, **kw)
+        b = self._round(True, use_kernels, **kw)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.slow
+    def test_simulate_round_packed_bitwise_equal_paper_scale(self):
+        """Paper geometry: D = 50,890 (the §V CNN), D_c = 4096,
+        S_c = 1024 — compress → MAC → decode identical bit for bit."""
+        kw = dict(D=50890, chunk=4096, measure=1024, topk=409, iters=2)
+        a = self._round(False, False, **kw)
+        b = self._round(True, False, **kw)
+        assert a.shape == b.shape and a.shape[0] >= 50890
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_compress_chunks_packed_width(self):
+        cfg = OBCSAAConfig(chunk=512, measure=128, topk=32, packed=True)
+        flat = jnp.asarray(np.random.default_rng(1).standard_normal(2048),
+                           jnp.float32)
+        signs, mags = compress_chunks(cfg, flat)
+        assert signs.dtype == jnp.uint32
+        assert signs.shape == (4, 128 // PACK)
+        cfg_f = OBCSAAConfig(chunk=512, measure=128, topk=32)
+        signs_f, _ = compress_chunks(cfg_f, flat)
+        np.testing.assert_array_equal(np.asarray(unpack_signs(signs)),
+                                      np.asarray(signs_f))
+
+    def test_comm_stats_packed_wire_ratio(self):
+        cfg = OBCSAAConfig(chunk=4096, measure=1024, topk=409)
+        st = comm_stats(cfg, D=50890)
+        assert st["uplink_bits_f32"] == 32 * (13 * 1024 + 13)
+        assert st["uplink_bits_packed"] == 13 * 1024 + 32 * 13
+        assert st["packed_wire_ratio"] > 30       # ≥4x required, ~31x real
+        assert st["uplink_bits_f32"] == 32 * 13 * 1024 + 32 * 13
+
+
+# --- explicit shape validation -------------------------------------------------------
+
+class TestShapeValidation:
+    def test_unknown_mode(self):
+        phi, chunks = _proj_inputs(6, 2, 64, 256)
+        with pytest.raises(ValueError, match="mode"):
+            cs_project.project(phi, chunks, mode="nope", interpret=True)
+
+    def test_non_tiling_shapes(self):
+        phi, chunks = _proj_inputs(7, 2, 64, 256)
+        with pytest.raises(ValueError, match="tile"):
+            cs_project.project(phi, chunks, mode="sign", interpret=True,
+                               tiles=(2, 48, 256))
+
+    def test_packed_measure_not_multiple_of_32(self):
+        phi = jnp.ones((48, 256))
+        chunks = jnp.ones((2, 256))
+        with pytest.raises(ValueError, match="32"):
+            cs_project.project(phi, chunks, mode="pack", interpret=True,
+                               tiles=(2, 48, 256))
+
+    def test_residual_modes_require_y(self):
+        phi, chunks = _proj_inputs(8, 2, 64, 256)
+        with pytest.raises(ValueError, match="y"):
+            cs_project.project(phi, chunks, mode="pack_sign_residual",
+                               interpret=True)
+
+    def test_backproject_packed_bitplane_shapes(self):
+        phi, chunks = _proj_inputs(9, 2, 64, 256)
+        x = jnp.zeros((2, 256))
+        good = jnp.zeros((2, 2), jnp.uint32)
+        with pytest.raises(ValueError, match="bit-plane"):
+            bp.backproject_packed(x, jnp.zeros((2, 3), jnp.uint32), good,
+                                  phi, 1.0, interpret=True)
+        with pytest.raises(ValueError, match="uint32"):
+            bp.backproject_packed(x, jnp.zeros((2, 2), jnp.int32), good,
+                                  phi, 1.0, interpret=True)
+
+    def test_obcsaa_config_packed_measure(self):
+        with pytest.raises(ValueError, match="32"):
+            OBCSAAConfig(chunk=512, measure=100, topk=32, packed=True)
+
+    def test_engine_rejects_bad_packed_geometry(self):
+        from repro.engine.config import FLConfig
+        from repro.engine.core import build_engine
+        from repro.optim.optimizers import sgd
+        ob = OBCSAAConfig(chunk=512, measure=100, topk=32)
+        cfg = FLConfig(obcsaa=ob)
+        object.__setattr__(ob, "packed", True)   # bypass config check to
+        # prove the engine validates independently at build time
+        with pytest.raises(ValueError, match="32"):
+            build_engine(cfg, lambda p, d: jnp.sum(p ** 2), sgd(), 1024, 4,
+                         lambda x: x)
