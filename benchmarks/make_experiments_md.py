@@ -191,6 +191,32 @@ def theory_table() -> str:
     return "\n".join(lines)
 
 
+def zoo_rows():
+    """zoo_bench rows: CI-scale rows under ``zoo:v1`` plus the zoo-scale
+    ≥1B row under ``zoo:v1:full`` (regenerated by
+    ``python -m benchmarks.zoo_bench --full``), both from
+    experiments/bench_cache.json; run fresh once if the cache is empty."""
+    from benchmarks.common import cached_rows
+    rows = cached_rows("zoo:v1")
+    if rows is None:
+        from benchmarks import zoo_bench
+        return zoo_bench.main()
+    return rows + (cached_rows(zoo_bench_full_key()) or [])
+
+
+def zoo_bench_full_key():
+    from benchmarks.zoo_bench import FULL_KEY
+    return FULL_KEY
+
+
+def zoo_table() -> str:
+    lines = ["| config | s/round | result |", "|---|---|---|"]
+    for name, us, derived in zoo_rows():
+        lines.append(f"| {name.split('/', 1)[-1]} | {us / 1e6:,.2f} | "
+                     f"{derived or '-'} |")
+    return "\n".join(lines)
+
+
 def packed_table() -> str:
     """Bytes moved through the 1-bit signal path, f32 vs the packed uint32
     codec (DESIGN.md §13) — static accounting at paper geometry
@@ -265,6 +291,19 @@ def main():
         "lands just under 32x. Packed is bit-for-bit equal to f32 through "
         "compress → MAC → decode (tests/test_packed.py), so the reduction "
         "is free.\n\n" + packed_table()
+        + "\n\n## Sharded model-zoo FL rounds (repro.engine.zoo, "
+        "DESIGN.md §14)\n\n"
+        "One full OBCSAA round (grads → 1-bit compress → power control → "
+        "packed int32 MAC + AWGN → chunked decode → update) with the "
+        "parameter vector sharded over the 8-device host mesh (4 FL "
+        "workers × 2 model shards); nothing dense at full D is ever "
+        "replicated. `parity-16k` is the CI gate: the sharded round chain "
+        "must stay BITWISE equal to the single-device reference oracle "
+        "(`parity=True`). The `gemma2-2b-2.6B` row is the ≥1B-parameter "
+        "acceptance run (full config, D=2.61B, wide-chunk geometry "
+        "D_c=16384 / S_c=32 / κ_c=8) with measured rounds/sec; it is "
+        "regenerated by `python -m benchmarks.zoo_bench --full` and "
+        "replayed from the cache otherwise.\n\n" + zoo_table()
         + "\n\n## Dry-run table\n\n" + dryrun_table()
         + "\n\n## Roofline table (single-pod, 256 chips)\n\n"
         + roofline_table() + "\n")

@@ -1,0 +1,177 @@
+"""Sharded model-zoo FL round throughput (engine/zoo.py, DESIGN.md §14).
+
+How fast does one full OBCSAA round (surrogate grads → 1-bit compress →
+packed int32 MAC → AWGN → chunked decode → update) run when the parameter
+vector is partitioned over the whole 8-device mesh and NOTHING dense at
+full D is ever replicated? Measured as rounds/sec on the host mesh
+(4 FL workers × 2 model shards), per architecture.
+
+Methodology:
+
+- Every measurement runs in a CHILD process so the 8-device XLA host flag
+  never leaks into the caller (the bench harness keeps 1 device).
+- Default rows are CI-scale: a parity gate (the 16k-element geometry of
+  tests/test_zoo.py — the sharded round must stay BITWISE equal to the
+  single-device reference over a 2-round chain) plus smoke-config rounds
+  for two architectures. CI asserts the deterministic parity flag, never
+  a timing ratio (the PR-3 convention).
+- ``--full`` regenerates the zoo-scale row: the gemma2-2b FULL config
+  (2.614B parameters — the ≥1B acceptance config) with the wide-chunk
+  geometry D_c=16384, S_c=32, κ_c=8. Parameters stay 8-way sharded
+  (1.3 GB/device); each worker column gathers one model-half and
+  compresses it in 64-chunk ``lax.map`` blocks, so peak memory is bounded
+  by the half + decode workspace, not U×D. The measured row is cached in
+  experiments/bench_cache.json and replayed by default runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import CACHE_PATH, cached_rows, emit
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+FULL_KEY = "zoo:v1:full"
+
+CHILD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import json, sys, time
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding
+    from repro.core.obcsaa import OBCSAAConfig
+    from repro.engine.zoo import build_zoo_round
+    from repro.launch.mesh import make_zoo_mesh
+
+    spec = json.loads(sys.argv[1])
+    mesh = make_zoo_mesh(spec["workers"], spec["mp"])
+    if spec.get("arch"):
+        from repro.configs import get_config, get_smoke_config
+        from repro.models.registry import build_model
+        cfg = (get_smoke_config if spec["smoke"] else get_config)(
+            spec["arch"])
+        shapes = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+        D = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(shapes))
+    else:
+        D = spec["D"]
+    ob = OBCSAAConfig(**spec["ob"])
+    zr = build_zoo_round(ob, D, mesh)
+    params = jax.jit(
+        lambda: jnp.zeros((zr.n_chunks, ob.chunk), jnp.float32),
+        out_shardings=NamedSharding(mesh, zr.spec))()
+
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    params, st = zr.round_gen(params, 0, key, 1e-4, 10.0, 0.05)
+    jax.block_until_ready(params)
+    compile_s = time.time() - t0
+    t0 = time.time()
+    for t in range(1, 1 + spec["rounds"]):
+        params, st = zr.round_gen(params, t, key, 1e-4, 10.0, 0.05)
+    jax.block_until_ready(params)
+    wall = time.time() - t0
+
+    out = {"D": D, "D_pad": zr.D_pad, "n_chunks": zr.n_chunks,
+           "workers": zr.U, "mp": zr.n_model, "rounds": spec["rounds"],
+           "compile_s": compile_s, "wall_s": wall,
+           "ghat_norm": float(st.ghat_norm),
+           "finite": bool(np.isfinite(float(st.ghat_norm)))}
+    if spec.get("parity"):
+        rc = zr.chunk_params(jnp.zeros((D,), jnp.float32))
+        for t in range(1 + spec["rounds"]):
+            rc, _ = zr.reference_round(rc, t, key, 1e-4, 10.0, 0.05)
+        out["parity"] = bool(np.array_equal(np.asarray(params),
+                                            np.asarray(rc)))
+    print("ZOO_RESULT " + json.dumps(out))
+""")
+
+
+def _child(spec: dict, timeout: int) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", CHILD, json.dumps(spec)],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"zoo child failed:\n{r.stderr[-3000:]}")
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("ZOO_RESULT ")][-1]
+    return json.loads(line[len("ZOO_RESULT "):])
+
+
+def _row(name: str, res: dict) -> tuple:
+    us = 1e6 * res["wall_s"] / max(res["rounds"], 1)
+    rate = res["rounds"] / res["wall_s"] if res["wall_s"] > 0 else 0.0
+    derived = (f"D={res['D']};mesh={res['workers']}x{res['mp']};"
+               f"rounds_per_s={rate:.4g};compile_s={res['compile_s']:.1f};"
+               f"finite={res['finite']}")
+    if "parity" in res:
+        derived += f";parity={res['parity']}"
+    return (name, us, derived)
+
+
+SMOKE_OB = dict(chunk=1024, measure=128, topk=32, biht_iters=3,
+                recon_alg="iht", spmd_topk=True, packed=True,
+                bisect_iters=16)
+PARITY_OB = dict(chunk=256, measure=64, topk=16, biht_iters=3,
+                 recon_alg="iht", spmd_topk=True, packed=True,
+                 bisect_iters=16)
+# ≥1B geometry: wide chunks keep n_chunks (and the decode batch) bounded;
+# S_c=32 is one packed uint32 word per chunk on the wire
+FULL_OB = dict(chunk=16384, measure=32, topk=8, biht_iters=2,
+               recon_alg="iht", spmd_topk=True, packed=True,
+               bisect_iters=10)
+
+
+def _smoke_rows():
+    rows = [_row("zoo/parity-16k", _child(
+        {"D": 16000, "ob": PARITY_OB, "rounds": 2, "workers": 4, "mp": 2,
+         "parity": True}, timeout=600))]
+    for arch in ("gemma2-2b", "mamba2-2.7b"):
+        rows.append(_row(f"zoo/{arch}-smoke", _child(
+            {"arch": arch, "smoke": True, "ob": SMOKE_OB, "rounds": 3,
+             "workers": 4, "mp": 2}, timeout=600)))
+    return rows
+
+
+def _full_rows():
+    res = _child({"arch": "gemma2-2b", "smoke": False, "ob": FULL_OB,
+                  "rounds": 1, "workers": 4, "mp": 2}, timeout=14400)
+    assert res["D"] >= 1_000_000_000, res
+    return [_row("zoo/gemma2-2b-2.6B", res)]
+
+
+def _store(key: str, rows):
+    cache = json.loads(CACHE_PATH.read_text()) if CACHE_PATH.exists() else {}
+    cache[key] = [list(r) for r in rows]
+    CACHE_PATH.parent.mkdir(parents=True, exist_ok=True)
+    CACHE_PATH.write_text(json.dumps(cache, indent=1))
+
+
+def main(full: bool = False):
+    """CI-scale rows run FRESH every time (they carry the parity gate);
+    the ≥1B row replays from experiments/bench_cache.json unless --full
+    regenerates it."""
+    rows = _smoke_rows()
+    _store("zoo:v1", rows)        # make_experiments_md reads the cache
+    emit(rows)
+    if full:
+        frows = _full_rows()
+        _store(FULL_KEY, frows)
+        emit(frows)
+    else:
+        frows = cached_rows(FULL_KEY)
+        if frows:
+            emit(frows)
+    return rows + (frows or [])
+
+
+if __name__ == "__main__":
+    main(full="--full" in sys.argv)

@@ -1,3 +1,3 @@
-from repro.checkpoint.io import latest_step, restore, save
+from repro.checkpoint.io import latest_step, restore, save, step_dir
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["latest_step", "restore", "save", "step_dir"]

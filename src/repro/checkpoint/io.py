@@ -2,6 +2,22 @@
 
 Layout: <dir>/step_<N>/{tree.msgpack, arrays.npz}. Arrays are stored in an
 npz (zero-copy reload); the msgpack holds the treedef + leaf metadata.
+
+Three properties the engine checkpoint wiring (DESIGN.md §14) leans on:
+
+- **Atomic step dirs** — ``save`` writes into ``step_<N>.tmp`` and renames
+  at the end, so a crash mid-write never leaves a half-written directory
+  that ``latest_step`` would pick up (the tmp suffix fails its regex).
+- **Template-strict restore** — ``restore`` validates leaf count, per-leaf
+  shape and dtype against the ``like`` template and raises a ``ValueError``
+  naming the offending leaf path; corrupted/truncated files surface as
+  ``ValueError("corrupt or truncated checkpoint ...")`` instead of a raw
+  zipfile/msgpack traceback.
+- **Sharding-aware load** — pass ``shardings`` (a pytree of
+  ``jax.sharding.Sharding`` matching ``like``) and every restored leaf is
+  ``device_put`` onto its target sharding, so a checkpoint written on one
+  mesh restores onto a differently-sized mesh; the bytes are mesh-layout
+  independent (leaves are saved as full host arrays).
 """
 from __future__ import annotations
 
@@ -30,39 +46,102 @@ def _flatten_with_paths(tree):
     return leaves, flat[1]
 
 
+def step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
 def save(ckpt_dir: str, step: int, tree: Any) -> str:
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+    """Write one checkpoint step atomically; returns the step directory."""
+    path = step_dir(ckpt_dir, step)
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
     leaves, _ = _flatten_with_paths(tree)
     arrays = {f"a{i}": arr for i, (_, arr) in enumerate(leaves)}
     meta = {"keys": [k for k, _ in leaves],
             "dtypes": [str(a.dtype) for _, a in leaves],
+            "shapes": [list(a.shape) for _, a in leaves],
             "step": step}
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
-    with open(os.path.join(path, "tree.msgpack"), "wb") as f:
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "tree.msgpack"), "wb") as f:
         f.write(msgpack.packb(meta))
+    if os.path.isdir(path):        # overwrite an existing step in place
+        import shutil
+        shutil.rmtree(path)
+    os.rename(tmp, path)
     return path
 
 
-def restore(ckpt_dir: str, step: int, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype template)."""
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "tree.msgpack"), "rb") as f:
-        meta = msgpack.unpackb(f.read())
-    data = np.load(os.path.join(path, "arrays.npz"))
-    arrays = [data[f"a{i}"] for i in range(len(meta["keys"]))]
+def _load_step(path: str):
+    """(meta, arrays) of one step dir, or ValueError with a message that
+    says WHICH file is corrupt/truncated and how to recover."""
+    meta_p = os.path.join(path, "tree.msgpack")
+    npz_p = os.path.join(path, "arrays.npz")
+    try:
+        with open(meta_p, "rb") as f:
+            meta = msgpack.unpackb(f.read())
+        if not isinstance(meta, dict) or "keys" not in meta:
+            raise ValueError("meta is not a checkpoint dict")
+    except Exception as e:
+        raise ValueError(
+            f"corrupt or truncated checkpoint meta {meta_p!r}: "
+            f"{type(e).__name__}: {e}. Delete this step directory and "
+            f"resume from an earlier step.") from e
+    try:
+        data = np.load(npz_p)
+        arrays = [data[f"a{i}"] for i in range(len(meta["keys"]))]
+    except Exception as e:
+        raise ValueError(
+            f"corrupt or truncated checkpoint arrays {npz_p!r}: "
+            f"{type(e).__name__}: {e}. Delete this step directory and "
+            f"resume from an earlier step.") from e
+    return meta, arrays
+
+
+def restore(ckpt_dir: str, step: int, like: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template).
+
+    ``like`` may hold real arrays or ``ShapeDtypeStruct`` leaves (e.g.
+    from ``jax.eval_shape``). ``shardings``: optional pytree of
+    ``jax.sharding.Sharding`` with the same structure — each restored
+    leaf is ``device_put`` onto it (mesh-elastic restore, DESIGN.md §14).
+    """
+    path = step_dir(ckpt_dir, step)
+    if not os.path.isdir(path):
+        have = _steps(ckpt_dir)
+        raise FileNotFoundError(
+            f"no checkpoint step {step} under {ckpt_dir!r} "
+            f"(available steps: {have or 'none'})")
+    meta, arrays = _load_step(path)
     flat, treedef = jax.tree_util.tree_flatten(like)
     if len(flat) != len(arrays):
-        raise ValueError(f"checkpoint has {len(arrays)} leaves, template has "
-                         f"{len(flat)}")
-    restored = [jax.numpy.asarray(a).astype(l.dtype).reshape(l.shape)
-                for a, l in zip(arrays, flat)]
+        raise ValueError(
+            f"checkpoint {path!r} has {len(arrays)} leaves, template has "
+            f"{len(flat)}; saved paths: {meta['keys'][:8]}... — was it "
+            f"written by a differently-configured run?")
+    restored = []
+    for key, arr, l in zip(meta["keys"], arrays, flat):
+        if tuple(arr.shape) != tuple(l.shape):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)}, "
+                f"template expects {tuple(l.shape)} — the run geometry "
+                f"(D, U, arms, chunking) must match the saved sweep")
+        restored.append(jax.numpy.asarray(arr).astype(l.dtype))
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_leaves(shardings)
+        if len(shard_flat) == len(restored):
+            restored = [jax.device_put(a, s)
+                        for a, s in zip(restored, shard_flat)]
     return jax.tree_util.tree_unflatten(treedef, restored)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def _steps(ckpt_dir: str) -> list:
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
-             if (m := re.match(r"step_(\d+)$", d))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
+                  if (m := re.match(r"step_(\d+)$", d)))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _steps(ckpt_dir)
+    return steps[-1] if steps else None

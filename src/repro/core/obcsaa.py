@@ -242,6 +242,21 @@ def shardmap_compress(cfg: OBCSAAConfig, local_flat: jnp.ndarray,
     (equal-sized shards; DESIGN.md §13). ``wire_dtype`` is ignored on the
     packed path — the symbols are already 1-bit."""
     signs, mags = compress_chunks(cfg, local_flat, phi)
+    return shardmap_mac(cfg, signs, mags, worker_axes, k_weight=k_weight,
+                        beta_i=beta_i, b_t=b_t, wire_dtype=wire_dtype)
+
+
+def shardmap_mac(cfg: OBCSAAConfig, signs, mags, worker_axes, *, k_weight,
+                 beta_i, b_t, wire_dtype=None):
+    """MAC superposition of one worker's ALREADY-compressed symbols
+    (eq. 12), INSIDE shard_map(manual over worker_axes).
+
+    Split out of ``shardmap_compress`` so callers that produce their signs
+    in blocks — the sharded zoo round's ``lax.map``-chunked compression at
+    ≥1B parameters (engine/zoo.py, DESIGN.md §14) — superpose through the
+    identical wire path: exact int32 ``psum_bits_mac`` when ``cfg.packed``,
+    f32 symbol psum otherwise. Returns ``(y, ksum, mag_sum)`` exactly like
+    ``shardmap_compress``."""
     if cfg.packed:
         s_int = coll.psum_bits_mac(signs, worker_axes, beta_i=beta_i)
         y = s_int.astype(jnp.float32) * (k_weight * b_t)  # eq. (12)

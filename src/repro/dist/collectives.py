@@ -60,6 +60,25 @@ def psum_bits_mac(packed, axes, *, beta_i=None):
     return psum(contrib, axes)
 
 
+def shard_slice(x, axes, *, axis: int = 0):
+    """This worker's equal block of a replicated array — the dual of
+    ``all_gather(tiled=True)``.
+
+    Slices ``[idx·n, (idx+1)·n)`` along ``axis`` where
+    ``idx = axis_index(axes)`` and ``n = shape[axis] // axis_size(axes)``.
+    The sharded zoo round (engine/zoo.py, DESIGN.md §14) uses it to split
+    the post-MAC decode across the worker axes: ``y`` comes out of the
+    superposition replicated over workers, and each device reconstructs
+    only the chunk block whose parameters it owns. No worker axes → the
+    whole array (single-worker federation)."""
+    axes = norm_axes(axes)
+    if not axes:
+        return x
+    n = x.shape[axis] // axis_size(axes)
+    idx = axis_index(axes)
+    return jax.lax.dynamic_slice_in_dim(x, idx * n, n, axis)
+
+
 def pmean(x, axes):
     axes = norm_axes(axes)
     if not axes:

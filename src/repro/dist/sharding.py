@@ -125,6 +125,29 @@ def best_spec(shape: Sequence[int], hints, mesh) -> P:
     return P(*parts)
 
 
+def infer_batch_sharding(tree, mesh, *, dim: int = 0):
+    """NamedSharding pytree for an (A, ...)-stacked sweep carry/arms tree:
+    shard dim ``dim`` of every leaf over the worker axes (via
+    ``best_spec``'s ``data`` hint, which widens to ``("pod", "data")`` on
+    3-axis meshes) when the arm count divides, replicate otherwise.
+
+    The engine's vmapped arms are embarrassingly parallel over the arm
+    axis — no cross-arm collectives — so arm-sharded placement turns the
+    sweep into per-device lane groups (DESIGN.md §14). Scalars and
+    non-divisible leaves replicate, which is always correct."""
+    mesh = compat._unwrap(mesh)
+
+    def spec_of(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if len(shape) <= dim:
+            return NamedSharding(mesh, P())
+        hints = [None] * len(shape)
+        hints[dim] = "data"
+        return NamedSharding(mesh, best_spec(shape, hints, mesh))
+
+    return jax.tree_util.tree_map(spec_of, tree)
+
+
 def infer_param_sharding(tree, mesh, *, model_axis: str = "model"):
     """NamedSharding pytree for params / optimizer state.
 

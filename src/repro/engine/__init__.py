@@ -17,12 +17,15 @@ from repro.engine.core import (EngineFns, build_engine, perfect_aggregate,
                                stacked_grads, topk_aa_aggregate)
 from repro.engine.runner import (EngineRun, chunk_spans, eval_points,
                                  run_sweep)
-from repro.engine.state import (Arms, EngineState, RoundStats, make_arms,
-                                n_arms, single_arm)
+from repro.engine.state import (Arms, EngineState, RoundStats,
+                                SweepCheckpoint, make_arms, n_arms,
+                                single_arm)
+from repro.engine.zoo import ZooRound, ZooStats, build_zoo_round
 
 __all__ = [
     "Arms", "ENGINE_SCHEDULERS", "EngineFns", "EngineRun", "EngineState",
-    "FLConfig", "RoundStats", "build_engine", "chunk_spans", "eval_points",
+    "FLConfig", "RoundStats", "SweepCheckpoint", "ZooRound", "ZooStats",
+    "build_engine", "build_zoo_round", "chunk_spans", "eval_points",
     "make_arms", "n_arms", "perfect_aggregate", "run_sweep", "single_arm",
     "stacked_grads", "topk_aa_aggregate",
 ]

@@ -54,6 +54,14 @@ class FLConfig:
     mode: str = "auto"
     # Solver knobs for the batched P2 schedulers (None -> defaults)
     sched_cfg: Optional[SchedConfig] = None
+    # Engine checkpointing (DESIGN.md §14): directory for eval-cadence
+    # carry snapshots. ``run_sweep`` saves the full ``SweepCheckpoint``
+    # (params/opt/fade/prev-β/warm-start/EF residuals + arms + t_next) at
+    # every scan-chunk boundary; with ``ckpt_resume`` it restores the
+    # latest step and continues bit-for-bit — the PRNG folds on absolute
+    # round indices, so no generator state needs serializing.
+    ckpt_dir: Optional[str] = None
+    ckpt_resume: bool = False
     # Measured-aggregation-error probe (repro.theory, DESIGN.md §12): emit
     # ‖ĝ−ḡ‖² per round next to the predicted Theorem-1 budget. Costs one
     # extra dense (U, D) reduction per round; OFF by default — disabled,

@@ -45,6 +45,16 @@ from repro.theory.bounds import error_budget
 _FADE_INIT_FOLD = 0x7FADE   # fold_in tag for the stationary t=0 fade draw
 
 
+def budget_geometry(ob, D: int):
+    """(n_chunks, S_eff, κ_eff) of the block-diagonal Φ at dimension D —
+    the Theorem-1 budget geometry (DESIGN.md §4/§12): the chunked operator
+    measures n_chunks·S_c symbols of an (up to) n_chunks·κ_c-sparse
+    vector. Shared by the engine round body and the sharded zoo round
+    (engine/zoo.py, DESIGN.md §14) so both report the same eq. 19 bound."""
+    n_chunks = -(-D // ob.chunk)
+    return n_chunks, n_chunks * ob.measure, min(n_chunks * ob.topk, D)
+
+
 class EngineFns(NamedTuple):
     """The built round functions + static geometry."""
     init_state: Callable    # (params, arm) -> EngineState
@@ -99,20 +109,16 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
         raise ValueError(
             f"build_engine: packed 1-bit codec needs S_c % 32 == 0, got "
             f"measure={ob.measure} (DESIGN.md §13)")
-    n_chunks = -(-D // ob.chunk)
+    n_chunks, s_eff, kappa_eff = budget_geometry(ob, D)
     pad = n_chunks * ob.chunk - D
     warm = cfg.aggregator == "obcsaa" and ob.warm_start
     ef = cfg.error_feedback
     rho = jnp.float32(cfg.channel_rho)
     scfg = cfg.sched_cfg
     probe = cfg.probe_agg_error
-    # Theorem-1 budget geometry: the block-diagonal Φ measures n_chunks·S_c
-    # symbols of an (up to) n_chunks·κ_c-sparse vector (DESIGN.md §4/§12).
     # Eq. 19 models the 1-bit CS pipeline, so the budget is only emitted
     # for the obcsaa aggregator (None leaf otherwise — fixed per build)
     track_bound = cfg.aggregator == "obcsaa"
-    s_eff = n_chunks * ob.measure
-    kappa_eff = min(n_chunks * ob.topk, D)
 
     def init_state(params, arm: Arms) -> EngineState:
         _, fade0 = chan.draw_fades(

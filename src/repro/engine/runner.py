@@ -21,9 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint
 from repro.core.sparsify import flatten_pytree
 from repro.engine.core import EngineFns, build_engine
-from repro.engine.state import Arms, make_arms, single_arm
+from repro.engine.state import Arms, SweepCheckpoint, make_arms, single_arm
 from repro.optim.optimizers import sgd
 from repro.theory.bounds import ErrorBudget
 
@@ -107,10 +108,42 @@ class EngineRun:
         return fn(state, arm, self.worker_data, self.k_weights,
                   jnp.int32(t0))
 
+    # -- checkpointing (DESIGN.md §14) -------------------------------------
+
+    def sweep_template(self, arms: Arms) -> SweepCheckpoint:
+        """Shape/dtype template of the sweep checkpoint — built with
+        ``eval_shape`` (no state allocation), structurally identical to
+        what ``run_sweep`` saves, so ``checkpoint.restore`` can validate
+        leaf-by-leaf before touching the carry."""
+        state = jax.eval_shape(
+            jax.vmap(lambda a: self.fns.init_state(self._params0, a)), arms)
+        return SweepCheckpoint(state=state, arms=arms,
+                               t_next=jnp.zeros((), jnp.int32))
+
+    def _restore_sweep(self, ckpt_dir: str, arms: Arms):
+        """(state, t_start) from the latest checkpoint step, or None.
+        The saved arms must match the requested ones bitwise — a resumed
+        sweep under different seeds/SNR/P^Max/lr would silently produce a
+        chimera trajectory."""
+        step = checkpoint.latest_step(ckpt_dir)
+        if step is None:
+            return None
+        ck = checkpoint.restore(ckpt_dir, step, self.sweep_template(arms))
+        for name, saved, want in zip(Arms._fields, ck.arms, arms):
+            if not np.array_equal(np.asarray(saved), np.asarray(want)):
+                raise ValueError(
+                    f"checkpoint {ckpt_dir!r} step {step} was written "
+                    f"under different arms (field {name!r} differs); "
+                    f"resuming would mix trajectories — pass the arms the "
+                    f"sweep was started with")
+        return ck.state, int(ck.t_next)
+
     # -- vmapped arms sweep ------------------------------------------------
 
     def run_sweep(self, arms: Arms, rounds: Optional[int] = None,
-                  eval_every: Optional[int] = None) -> Dict:
+                  eval_every: Optional[int] = None, *,
+                  ckpt_dir: Optional[str] = None,
+                  resume: Optional[bool] = None, mesh=None) -> Dict:
         """Run A arms for ``rounds`` rounds as vmapped scan chunks.
 
         Returns a dict of host arrays: per-round scheduling trajectories
@@ -123,18 +156,53 @@ class EngineRun:
         only — plus ``agg_err`` when the
         measured-error probe is on, eval streams ``eval_rounds``/``loss``/
         ``accuracy`` when an eval_fn is present, and the final per-arm
-        ``params`` (stacked pytree) + ``state``."""
+        ``params`` (stacked pytree) + ``state``.
+
+        Checkpointing (DESIGN.md §14): with ``ckpt_dir`` (or
+        ``cfg.ckpt_dir``) the full ``SweepCheckpoint`` is saved at every
+        scan-chunk boundary (the eval cadence); ``resume`` (or
+        ``cfg.ckpt_resume``) restores the latest step and continues —
+        bit-for-bit identical to the uninterrupted sweep, because the
+        post-boundary chunk programs and their absolute-round PRNG folds
+        are the same in both runs. Stat/eval streams then cover only
+        [t_start, rounds) — ``out["t_start"]`` says where they begin.
+        ``mesh``: optional device mesh; state/arms are placed with the
+        leading arm axis sharded over the worker axes
+        (``dist.infer_batch_sharding``) so A-arm sweeps spread over
+        devices."""
         cfg = self.cfg
         rounds = rounds or cfg.rounds
         eval_every = eval_every if eval_every is not None \
             else (cfg.eval_every if self.eval_fn else None)
+        ckpt_dir = ckpt_dir if ckpt_dir is not None else cfg.ckpt_dir
+        resume = cfg.ckpt_resume if resume is None else resume
         A = int(arms.noise_var.shape[0])
         state = jax.vmap(lambda a: self.fns.init_state(self._params0, a)
                          )(arms)
+        t_start = 0
+        if resume:
+            if not ckpt_dir:
+                raise ValueError("run_sweep(resume=True) needs ckpt_dir "
+                                 "(or FLConfig.ckpt_dir)")
+            restored = self._restore_sweep(ckpt_dir, arms)
+            if restored is not None:
+                state, t_start = restored
+        if mesh is not None:
+            from repro.dist.sharding import infer_batch_sharding
+            state = jax.device_put(state, infer_batch_sharding(state, mesh))
+            arms = jax.device_put(arms, infer_batch_sharding(arms, mesh))
         eval_v = jax.vmap(self.eval_fn) if self.eval_fn else None
         n_sched, b_ts, losses, accs, eval_ts = [], [], [], [], []
         budgets, errs = [], []
         for t0, n in chunk_spans(rounds, eval_every):
+            if t0 + n <= t_start:
+                continue                    # chunk fully covered by resume
+            if t0 < t_start:
+                raise ValueError(
+                    f"checkpoint t_next={t_start} does not land on a chunk "
+                    f"boundary for rounds={rounds}, eval_every={eval_every} "
+                    f"— resume must use the cadence the sweep was saved "
+                    f"with (boundary before it: t0={t0})")
             state, stats = self.run_chunk(state, arms, t0, n, vmapped=True)
             # stats leaves: (A, n) -> per-round trajectory slabs
             n_sched.append(np.asarray(stats.n_scheduled))
@@ -148,19 +216,28 @@ class EngineRun:
                 losses.append(np.asarray(loss))
                 accs.append(np.asarray(acc))
                 eval_ts.append(t0 + n - 1)
-        out = {"n_scheduled": np.concatenate(n_sched, axis=1),
-               "b_t": np.concatenate(b_ts, axis=1),
-               "state": state, "params": state.params, "arms": arms}
-        assert out["n_scheduled"].shape == (A, rounds)
+            if ckpt_dir:
+                checkpoint.save(ckpt_dir, t0 + n, SweepCheckpoint(
+                    state=state, arms=arms,
+                    t_next=jnp.asarray(t0 + n, jnp.int32)))
+
+        def cat(parts, dtype=np.float32):
+            return (np.concatenate(parts, axis=1) if parts
+                    else np.zeros((A, 0), dtype))
+
+        out = {"n_scheduled": cat(n_sched, np.int32), "b_t": cat(b_ts),
+               "state": state, "params": state.params, "arms": arms,
+               "t_start": t_start}
+        assert out["n_scheduled"].shape == (A, rounds - t_start)
         if budgets:
             budget = ErrorBudget(*(np.concatenate(parts, axis=1)
                                    for parts in zip(*budgets)))
             out["budget"] = budget
             out["rt_bound"] = np.asarray(budget.rt())
-            assert out["rt_bound"].shape == (A, rounds)
+            assert out["rt_bound"].shape == (A, rounds - t_start)
         if errs:
             out["agg_err"] = np.concatenate(errs, axis=1)
-        if eval_v is not None:
+        if eval_v is not None and losses:
             out["eval_rounds"] = np.asarray(eval_ts)
             out["loss"] = np.stack(losses, axis=1)       # (A, n_evals)
             out["accuracy"] = np.stack(accs, axis=1)
@@ -170,11 +247,15 @@ class EngineRun:
 def run_sweep(cfg, loss_fn, params, worker_data, k_weights, *,
               arms: Optional[Arms] = None, eval_fn=None, optimizer=None,
               rounds: Optional[int] = None,
-              eval_every: Optional[int] = None, **arm_axes) -> Dict:
+              eval_every: Optional[int] = None,
+              ckpt_dir: Optional[str] = None,
+              resume: Optional[bool] = None, mesh=None, **arm_axes) -> Dict:
     """One-call sweep: build the engine, broadcast ``arm_axes`` (seeds /
     noise_var / p_max / lr sequences) into an ``Arms`` pytree and run the
-    scan × vmap grid. See ``EngineRun.run_sweep`` for the result dict."""
+    scan × vmap grid. See ``EngineRun.run_sweep`` for the result dict and
+    the checkpoint/resume semantics (DESIGN.md §14)."""
     run = EngineRun(cfg, loss_fn, params, worker_data, k_weights,
                     eval_fn=eval_fn, optimizer=optimizer)
     arms = arms if arms is not None else make_arms(cfg, **arm_axes)
-    return run.run_sweep(arms, rounds=rounds, eval_every=eval_every)
+    return run.run_sweep(arms, rounds=rounds, eval_every=eval_every,
+                         ckpt_dir=ckpt_dir, resume=resume, mesh=mesh)

@@ -49,6 +49,21 @@ class RoundStats(NamedTuple):
     agg_err: Optional[jnp.ndarray] = None   # f32: ‖ĝ−ḡ‖² probe | None
 
 
+class SweepCheckpoint(NamedTuple):
+    """Everything ``run_sweep`` needs to continue bit-for-bit after a
+    restart (DESIGN.md §14): the (A, ...)-stacked ``EngineState`` carry —
+    params, optimizer state, complex fade state, previous β, decoder
+    warm-start chunks, EF residuals — the ``Arms`` it was advanced under
+    (restore verifies these bitwise; resuming under different arms would
+    silently invalidate every trajectory), and ``t_next``, the first round
+    not yet run. Because round t keys are ``fold_in(arm.key, t)`` on the
+    ABSOLUTE round index (engine/core.py), a restored carry replays the
+    identical channel/noise draws with no RNG state to serialize."""
+    state: Any                         # EngineState, (A, ...)-stacked
+    arms: Any                          # Arms the carry was advanced under
+    t_next: jnp.ndarray                # i32 scalar: first round not run
+
+
 class Arms(NamedTuple):
     """Dynamic experiment-arm axes; leaves are scalars for a single arm or
     (A, ...)-stacked for a vmapped sweep."""

@@ -1,0 +1,403 @@
+"""repro.engine.zoo — shard_map'd full FL rounds at model-zoo scale
+(DESIGN.md §14).
+
+The scan engine (engine/core.py) materialises per-worker gradients as a
+dense (U, D) array — fine for the paper's §V simulations, hopeless at
+≥1B parameters. This module runs the SAME round pipeline (eq. 3 local
+gradients → eq. 6-7 compress → eq. 10 power scaling → eq. 12-13 MAC+AWGN
+→ eq. 43 decode → eq. 14 update) as one ``jax.shard_map`` program over
+the whole device mesh, with nothing dense at full D ever replicated:
+
+* Parameters live chunked as a (n_chunks, D_c) f32 array whose chunk axis
+  is partitioned over ``("model",) + worker_axes`` — model-major, so the
+  device at (worker d, model m) owns the contiguous chunk block
+  ``m·n_half + d·n_local`` (n_half = n_chunks / n_model,
+  n_local = n_half / n_workers). Spec from ``dist.best_spec`` via
+  :func:`param_spec`.
+* Each FL worker (= its column of ``n_model`` devices) gathers one
+  MODEL-HALF of the parameters over the worker axes
+  (``all_gather(tiled)``), generates its local gradients for that half,
+  and compresses them in ``lax.map`` blocks of ``block_chunks`` chunks —
+  peak memory is one model-half plus one block, never (U, D).
+* The uplink is the packed 1-bit wire when ``ob.packed``: uint32 sign
+  words into the exact int32 bit-count MAC (``collectives.psum_bits_mac``
+  via ``obcsaa.shardmap_mac``), worker-axis psum = the over-the-air
+  superposition (DESIGN.md §3/§13).
+* The PS side redraws the FULL (n_chunks, S_c) AWGN from one shared key
+  on every device and each device decodes only its own quarter
+  (``collectives.shard_slice``), updating its local parameter block in
+  place — the decoded estimate is never gathered.
+
+Gradients come from either real per-worker grads handed in as a
+(U, n_chunks, D_c) array sharded (workers × model) — the zoo smoke tier
+path, U must equal the mesh worker count — or from a deterministic
+surrogate objective ½‖p − c_u‖² whose per-worker anchors c_u hash the
+GLOBAL element index (mesh-layout invariant), so the ≥1B benchmark needs
+no dataset and any mesh produces bit-identical rounds.
+
+:func:`ZooRound.reference_round` is the single-device oracle: same
+schedule, same surrogate, same int32 superposition, same full-noise-draw
+— the parity target for tests/test_zoo.py. Scheduling (P2, eq. 24) and
+the Theorem-1 ``ErrorBudget`` (eq. 19 via ``budget_geometry``) run
+outside the shard_map, exactly as in the scan engine.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import channel as chan
+from repro.core.obcsaa import (OBCSAAConfig, compress_chunks,
+                               reconstruct_chunks, shardmap_mac)
+from repro.core.sparsify import flatten_pytree
+from repro.dist import collectives as coll
+from repro.engine.core import budget_geometry
+from repro.launch.mesh import num_workers, worker_axes
+from repro.sched.admm import admm_solve_batched_jit
+from repro.sched.greedy import greedy_solve_batched
+from repro.sched.problem import BatchedProblem
+from repro.theory.bounds import AnalysisConstants, ErrorBudget, error_budget
+
+
+class ZooStats(NamedTuple):
+    """Per-round diagnostics of one zoo round (host-visible scalars)."""
+    n_scheduled: jnp.ndarray            # |M_t| (i32)
+    b_t: jnp.ndarray                    # eq. 10 power scale (f32)
+    ghat_norm: jnp.ndarray              # ‖ĝ_t‖ over the FULL vector (f32)
+    budget: Optional[ErrorBudget]       # Theorem-1 eq. 19 terms (§12)
+
+
+def _hash_u01(idx, widx, t):
+    """U(0,1) from (global element index, worker, round) — a splitmix-style
+    integer hash, so the surrogate anchors depend only on GLOBAL indices
+    and are identical whatever mesh (or single device) computes them."""
+    x = idx * jnp.uint32(0x9E3779B1)
+    x = x ^ ((widx.astype(jnp.uint32) + 1) * jnp.uint32(0x85EBCA77))
+    x = x ^ ((t.astype(jnp.uint32) + 1) * jnp.uint32(0xC2B2AE3D))
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x85EBCA77)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE3D)
+    x = x ^ (x >> 16)
+    return (x >> 8).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def param_spec(mesh) -> P:
+    """PartitionSpec of the chunked (n_chunks, D_c) parameter array: chunk
+    axis over model-major ``("model",) + worker_axes`` (DESIGN.md §14)."""
+    parts = (("model",) if "model" in mesh.axis_names else ()) \
+        + worker_axes(mesh)
+    return P(parts if len(parts) > 1 else parts[0], None)
+
+
+def grads_spec(mesh) -> P:
+    """PartitionSpec of a (U, n_chunks, D_c) per-worker gradient array:
+    workers over the worker axes, chunks over the model axis."""
+    waxes = worker_axes(mesh)
+    w = waxes if len(waxes) > 1 else waxes[0]
+    m = "model" if "model" in mesh.axis_names else None
+    return P(w, m, None)
+
+
+class ZooRound:
+    """One built zoo-round program for (ob, D, mesh). See module docstring.
+
+    ``round_gen(params, t, key, noise_var, p_max, lr)`` and
+    ``round_from_grads(params, grads, t, ...)`` are jitted; ``params`` is
+    the sharded (n_chunks, D_c) array from :meth:`shard_params` and comes
+    back with the same sharding, so rounds chain without reshards."""
+
+    def __init__(self, ob: OBCSAAConfig, D: int, mesh, *,
+                 scheduler: str = "all",
+                 const: Optional[AnalysisConstants] = None,
+                 sched_cfg=None, grad_scale: float = 0.05,
+                 block_chunks: int = 64):
+        if D >= 2 ** 32:
+            raise ValueError("zoo surrogate hashes uint32 element indices; "
+                             f"D={D} needs a 64-bit index path")
+        self.ob, self.D, self.mesh = ob, int(D), mesh
+        self.waxes = worker_axes(mesh)
+        self.U = num_workers(mesh)
+        self.n_model = int(mesh.shape.get("model", 1))
+        self.grad_scale = jnp.float32(grad_scale)
+        self.scheduler = scheduler
+        self.const = const or AnalysisConstants()
+        self.sched_cfg = sched_cfg
+        # chunk count padded so every device owns an equal block
+        n_raw = -(-self.D // ob.chunk)
+        gran = self.n_model * self.U
+        self.n_chunks = -(-n_raw // gran) * gran
+        self.D_pad = self.n_chunks * ob.chunk
+        self.n_half = self.n_chunks // self.n_model
+        self.n_local = self.n_half // self.U
+        self.block = next(b for b in range(min(block_chunks, self.n_half),
+                                           0, -1) if self.n_half % b == 0)
+        self.spec = param_spec(mesh)
+        self.grads_spec = grads_spec(mesh)
+        _, s_eff, kappa_eff = budget_geometry(ob, self.D_pad)
+        self._s_eff, self._kappa_eff = s_eff, kappa_eff
+        self._kw = jnp.ones((self.U,), jnp.float32)
+        self._build()
+
+    # -- host-side layout helpers ------------------------------------------
+
+    def chunk_params(self, params) -> jnp.ndarray:
+        """Flat (D,) array or pytree -> padded f32 (n_chunks, D_c)."""
+        flat = params if isinstance(params, jnp.ndarray) and params.ndim == 1 \
+            else flatten_pytree(params)[0]
+        flat = flat.astype(jnp.float32)
+        return jnp.pad(flat, (0, self.D_pad - self.D)).reshape(
+            self.n_chunks, self.ob.chunk)
+
+    def shard_params(self, chunked) -> jnp.ndarray:
+        return jax.device_put(chunked, NamedSharding(self.mesh, self.spec))
+
+    def chunk_worker_grads(self, grads) -> jnp.ndarray:
+        """(U, D) per-worker grads -> sharded (U, n_chunks, D_c). U must
+        equal the mesh worker count — FL workers ARE the worker-axis
+        shards (DESIGN.md §3)."""
+        g = jnp.asarray(grads, jnp.float32)
+        assert g.shape == (self.U, self.D), (g.shape, self.U, self.D)
+        g = jnp.pad(g, ((0, 0), (0, self.D_pad - self.D)))
+        g = g.reshape(self.U, self.n_chunks, self.ob.chunk)
+        return jax.device_put(g, NamedSharding(self.mesh, self.grads_spec))
+
+    def unchunk(self, chunked) -> jnp.ndarray:
+        """(n_chunks, D_c) -> flat (D,) on the host (drops the padding —
+        pad-chunk parameters are never read back)."""
+        return jnp.asarray(chunked).reshape(-1)[:self.D]
+
+    # -- round pieces ------------------------------------------------------
+
+    def _schedule(self, h, noise_var, p_max):
+        """P2 at this round's channels (eq. 24), host-of-shard_map side —
+        mirrors engine/core.py so zoo and scan rounds schedule alike."""
+        ob = self.ob
+        bp = BatchedProblem.from_arrays(
+            h[None], self._kw[None], p_max, noise_var, D=self.D,
+            S=ob.measure, kappa=ob.topk, const=self.const)
+        if self.scheduler == "all":
+            beta = jnp.ones_like(bp.h)
+            b_t = bp.optimal_bt(beta)
+        elif self.scheduler == "greedy_batched":
+            beta, b_t, _ = greedy_solve_batched(bp, self.sched_cfg)
+        elif self.scheduler in ("admm_batched", "admm_batched_jit"):
+            beta, b_t, _ = admm_solve_batched_jit(bp, self.sched_cfg)
+        else:
+            raise ValueError(f"zoo scheduler {self.scheduler!r} must be "
+                             "jittable: all | greedy_batched | admm_batched")
+        return beta[0], b_t[0]
+
+    def _surrogate_grads(self, p_blk, chunk_off, widx, t):
+        """Worker ``widx``'s gradient of ½‖p − c_u‖² on a chunk block:
+        g = p − c_u, anchors c_u = grad_scale·(U(0,1) − ½) hashed from the
+        GLOBAL element index. Padding elements (index ≥ D) get zero
+        gradients, so pad chunks carry zero magnitude and decode to zero
+        under magnitude tracking."""
+        nb, dc = p_blk.shape
+        idx = ((chunk_off.astype(jnp.uint32)
+                + jnp.arange(nb, dtype=jnp.uint32))[:, None]
+               * jnp.uint32(dc) + jnp.arange(dc, dtype=jnp.uint32)[None, :])
+        c = self.grad_scale * (_hash_u01(idx, widx, t) - 0.5)
+        return jnp.where(idx < jnp.uint32(self.D), p_blk - c, 0.0)
+
+    def _mac_decode_update(self, pl, signs, mags, beta, b_t, noise_key,
+                           noise_var, lr, widx, half0, phi):
+        """Shared tail of both round bodies, INSIDE shard_map: packed MAC
+        over the worker axes (eq. 12), post-processing + AWGN (eq. 13),
+        decode of this device's quarter only (eq. 43), local update
+        (eq. 14)."""
+        ob = self.ob
+        y, ksum, mag_sum = shardmap_mac(
+            ob, signs, mags, self.waxes, k_weight=jnp.float32(1.0),
+            beta_i=beta[widx], b_t=b_t)
+        denom = jnp.maximum(ksum * b_t, 1e-12)
+        # one shared draw of the FULL noise field, sliced per device: the
+        # single-device reference slices the same field, so AWGN is
+        # bit-identical whatever the mesh shape (mesh-elastic parity)
+        noise = chan.draw_noise(noise_key, (self.n_chunks, ob.measure),
+                                noise_var)
+        q0 = half0 + widx * self.n_local
+        yq = coll.shard_slice(y, self.waxes)            # (n_local, S_c)
+        yq = (yq + jax.lax.dynamic_slice_in_dim(noise, q0, self.n_local, 0)
+              ) / denom
+        mbar_q = None
+        if ob.magnitude_tracking:
+            mbar_q = coll.shard_slice(mag_sum, self.waxes) \
+                / jnp.maximum(ksum, 1e-12)
+        ghat = reconstruct_chunks(ob, yq, mbar_q, phi).reshape(
+            self.n_local, ob.chunk)
+        axes_all = self.waxes + (("model",) if "model"
+                                 in self.mesh.axis_names else ())
+        gn2 = coll.psum(jnp.sum(ghat * ghat), axes_all)
+        return pl - lr * ghat, gn2
+
+    def _build(self):
+        ob, waxes = self.ob, self.waxes
+        n_half, block = self.n_half, self.block
+        phi = None  # rebuilt per trace from ob.phi() inside compress/decode
+
+        def model_idx():
+            return (coll.axis_index(("model",))
+                    if "model" in self.mesh.axis_names
+                    else jnp.zeros((), jnp.int32))
+
+        def body_gen(pl, beta, b_t, noise_key, noise_var, lr, t):
+            widx = coll.axis_index(waxes)
+            half0 = model_idx() * n_half
+            ph = coll.all_gather(pl, waxes, tiled=True)  # (n_half, D_c)
+            nb = n_half // block
+            offs = half0 + jnp.arange(nb, dtype=jnp.int32) * block
+
+            def one(args):
+                p_blk, off = args
+                g = self._surrogate_grads(p_blk, off, widx, t)
+                return compress_chunks(ob, g, phi)
+
+            signs, mags = jax.lax.map(
+                one, (ph.reshape(nb, block, ob.chunk), offs))
+            signs = signs.reshape((n_half,) + signs.shape[2:])
+            return self._mac_decode_update(
+                pl, signs, mags.reshape(n_half), beta, b_t, noise_key,
+                noise_var, lr, widx, half0, phi)
+
+        def body_grads(pl, gl, beta, b_t, noise_key, noise_var, lr):
+            widx = coll.axis_index(waxes)
+            half0 = model_idx() * n_half
+            signs, mags = compress_chunks(ob, gl[0], phi)  # (n_half, D_c)
+            return self._mac_decode_update(
+                pl, signs, mags, beta, b_t, noise_key, noise_var, lr,
+                widx, half0, phi)
+
+        rep = P(None)
+        sc = P()
+        sm_gen = jax.shard_map(
+            body_gen, mesh=self.mesh,
+            in_specs=(self.spec, rep, sc, rep, sc, sc, sc),
+            out_specs=(self.spec, sc), check_vma=False)
+        sm_grads = jax.shard_map(
+            body_grads, mesh=self.mesh,
+            in_specs=(self.spec, self.grads_spec, rep, sc, rep, sc, sc),
+            out_specs=(self.spec, sc), check_vma=False)
+
+        def prologue(t, key, noise_var, p_max):
+            """Per-round schedule + keys, shared with reference_round:
+            absolute-round PRNG folds (fold 0 → fades, fold 1 → AWGN),
+            i.i.d. block fading (§V)."""
+            t = jnp.asarray(t, jnp.int32)
+            k_t = jax.random.fold_in(key, t)
+            h, _ = chan.draw_fades(jax.random.fold_in(k_t, 0), (self.U,))
+            beta, b_t = self._schedule(h, noise_var, p_max)
+            return t, beta, b_t, jax.random.fold_in(k_t, 1)
+
+        def stats(beta, b_t, gn2, noise_var):
+            budget = error_budget(self.const, D=self.D_pad, S=self._s_eff,
+                                  kappa=self._kappa_eff, beta=beta,
+                                  k_weights=self._kw, b_t=b_t,
+                                  noise_var=noise_var)
+            return ZooStats(n_scheduled=jnp.sum(beta > 0).astype(jnp.int32),
+                            b_t=b_t, ghat_norm=jnp.sqrt(gn2), budget=budget)
+
+        def round_gen(params, t, key, noise_var, p_max, lr):
+            t, beta, b_t, nkey = prologue(t, key, noise_var, p_max)
+            pl2, gn2 = sm_gen(params, beta, b_t, nkey,
+                              jnp.float32(noise_var), jnp.float32(lr), t)
+            return pl2, stats(beta, b_t, gn2, noise_var)
+
+        def round_from_grads(params, grads, t, key, noise_var, p_max, lr):
+            t, beta, b_t, nkey = prologue(t, key, noise_var, p_max)
+            pl2, gn2 = sm_grads(params, grads, beta, b_t, nkey,
+                                jnp.float32(noise_var), jnp.float32(lr))
+            return pl2, stats(beta, b_t, gn2, noise_var)
+
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self.round_gen = jax.jit(round_gen, donate_argnums=donate)
+        self.round_from_grads = jax.jit(round_from_grads,
+                                        donate_argnums=donate)
+        self._prologue = prologue
+        self._stats = stats
+        # the reference MUST be jitted too: the op sequence is identical,
+        # but eager-mode execution fuses f32 arithmetic differently from
+        # the compiled sharded round and drifts final ulps
+        self._ref_gen = jax.jit(
+            lambda c, t, key, nv, pm, lr:
+            self._reference_impl(c, t, key, nv, pm, lr, None))
+        self._ref_grads = jax.jit(
+            lambda c, g, t, key, nv, pm, lr:
+            self._reference_impl(c, t, key, nv, pm, lr, g))
+
+    # -- single-device oracle ----------------------------------------------
+
+    def reference_round(self, chunked, t, key, noise_var, p_max, lr,
+                        grads=None):
+        """The same round on ONE device, no collectives: the parity
+        target, bit-for-bit equal to the sharded round on the packed wire
+        (exact int32 superposition on both sides; the f32 symbol path
+        reduces in psum order on the mesh and may differ in final ulps).
+
+        ``chunked``: replicated (n_chunks, D_c). ``grads``: optional
+        (U, n_chunks, D_c)."""
+        if grads is not None:
+            return self._ref_grads(chunked, grads, t, key, noise_var,
+                                   p_max, lr)
+        return self._ref_gen(chunked, t, key, noise_var, p_max, lr)
+
+    def _reference_impl(self, chunked, t, key, noise_var, p_max, lr,
+                        grads):
+        ob, U = self.ob, self.U
+        t, beta, b_t, nkey = self._prologue(t, key, noise_var, p_max)
+
+        def one(u):
+            g = grads[u] if grads is not None else self._surrogate_grads(
+                chunked, jnp.zeros((), jnp.int32), u, t)
+            return compress_chunks(ob, g, None)
+
+        signs, mags = jax.lax.map(one, jnp.arange(U, dtype=jnp.int32))
+        if ob.packed:
+            from repro.kernels.sign import unpack_bits
+            contrib = (2 * unpack_bits(signs, jnp.int32) - 1) \
+                * beta.astype(jnp.int32)[:, None, None]
+            y = jnp.sum(contrib, axis=0).astype(jnp.float32) * b_t
+        else:
+            w = (beta * b_t).astype(signs.dtype)
+            y = jnp.einsum("u,ucs->cs", w, signs)
+        ksum = jnp.sum(beta)
+        denom = jnp.maximum(ksum * b_t, 1e-12)
+        noise = chan.draw_noise(nkey, (self.n_chunks, ob.measure), noise_var)
+        y = (y + noise) / denom
+        mbar = None
+        if ob.magnitude_tracking:
+            mbar = jnp.einsum("u,uc->c", beta.astype(mags.dtype), mags) \
+                / jnp.maximum(ksum, 1e-12)
+        ghat = reconstruct_chunks(ob, y, mbar, None).reshape(
+            self.n_chunks, ob.chunk)
+        gn2 = jnp.sum(ghat * ghat)
+        return (chunked - jnp.float32(lr) * ghat,
+                self._stats(beta, b_t, gn2, noise_var))
+
+    # -- multi-round driver ------------------------------------------------
+
+    def run_rounds(self, params, rounds: int, *, key, noise_var, p_max, lr,
+                   grads=None, t0: int = 0):
+        """Host loop over ``rounds`` jitted zoo rounds from absolute round
+        ``t0`` (one compiled program, reused). Returns (params', list of
+        host ZooStats)."""
+        out = []
+        for t in range(t0, t0 + rounds):
+            if grads is not None:
+                params, st = self.round_from_grads(
+                    params, grads, t, key, noise_var, p_max, lr)
+            else:
+                params, st = self.round_gen(
+                    params, t, key, noise_var, p_max, lr)
+            out.append(jax.tree_util.tree_map(np.asarray, st))
+        return params, out
+
+
+def build_zoo_round(ob: OBCSAAConfig, D: int, mesh, **kw) -> ZooRound:
+    """Build the shard_map'd zoo round programs for (ob, D, mesh)."""
+    return ZooRound(ob, D, mesh, **kw)

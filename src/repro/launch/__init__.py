@@ -4,7 +4,7 @@ NOTE: do not import ``repro.launch.dryrun`` at package level — it sets
 XLA_FLAGS (512 host devices) at import for its own process.
 """
 from repro.launch.mesh import (make_host_mesh, make_production_mesh,
-                               num_workers, worker_axes)
+                               make_zoo_mesh, num_workers, worker_axes)
 
-__all__ = ["make_host_mesh", "make_production_mesh", "num_workers",
-           "worker_axes"]
+__all__ = ["make_host_mesh", "make_production_mesh", "make_zoo_mesh",
+           "num_workers", "worker_axes"]

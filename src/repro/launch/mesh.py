@@ -23,6 +23,24 @@ def make_host_mesh(model_parallel: int = 1):
                          ("data", "model"))
 
 
+def make_zoo_mesh(n_workers: int = 0, model_parallel: int = 0):
+    """Mesh for sharded model-zoo rounds (engine/zoo.py, DESIGN.md §14):
+    ``(n_workers, model_parallel)`` over ``("data", "model")`` on the
+    local devices. Zeros pick defaults — every device used, model
+    parallelism 2 when the device count allows it (the ≥1B CPU bench
+    geometry: 4 FL workers × 2 model shards on an 8-device host mesh)."""
+    n = len(jax.devices())
+    if not model_parallel:
+        model_parallel = 2 if n % 2 == 0 and n > 1 else 1
+    if not n_workers:
+        n_workers = n // model_parallel
+    if n_workers * model_parallel != n:
+        raise ValueError(
+            f"make_zoo_mesh: {n_workers} workers x {model_parallel} model "
+            f"shards != {n} local devices")
+    return jax.make_mesh((n_workers, model_parallel), ("data", "model"))
+
+
 def worker_axes(mesh) -> tuple:
     """Mesh axes that enumerate FL workers (DESIGN.md §3)."""
     return tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)

@@ -348,3 +348,33 @@ def cache_shardings(cache_shapes, mesh):
 def param_shardings(model: Model, mesh, sample_batch_specs=None):
     shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     return infer_param_sharding(shapes, mesh), shapes
+
+
+# --- trainer checkpointing (DESIGN.md §14) ---------------------------------------
+
+def save_train_state(ckpt_dir: str, step: int, params, opt_state) -> str:
+    """Snapshot the trainer carry (params + optimizer state) at ``step``.
+    One atomic step directory via ``repro.checkpoint.save``."""
+    from repro import checkpoint
+    return checkpoint.save(ckpt_dir, step,
+                           {"params": params, "opt_state": opt_state})
+
+
+def restore_train_state(ckpt_dir: str, model: Model, tcfg: TrainConfig,
+                        mesh):
+    """(params, opt_state, step) from the latest checkpoint, placed with
+    the mesh shardings the train step expects — the checkpoint itself is
+    geometry-free (plain arrays), so a run saved on one mesh restores onto
+    a differently-sized one (DESIGN.md §14). Returns None when
+    ``ckpt_dir`` holds no steps yet (fresh start)."""
+    from repro import checkpoint
+    step = checkpoint.latest_step(ckpt_dir)
+    if step is None:
+        return None
+    pshard, pshapes = param_shardings(model, mesh)
+    oshapes = jax.eval_shape(make_optimizer(tcfg).init, pshapes)
+    tree = checkpoint.restore(
+        ckpt_dir, step, {"params": pshapes, "opt_state": oshapes},
+        shardings={"params": pshard,
+                   "opt_state": infer_param_sharding(oshapes, mesh)})
+    return tree["params"], tree["opt_state"], step

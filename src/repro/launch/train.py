@@ -53,7 +53,18 @@ def main():
     ap.add_argument("--cs-measure", type=int, default=256)
     ap.add_argument("--cs-topk", type=int, default=64)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="also snapshot params+opt every N steps (0: only "
+                         "the final step); scan mode snapshots at chunk "
+                         "boundaries whenever --ckpt-dir is set")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest step from --ckpt-dir and "
+                         "continue; round RNG/schedules index absolute "
+                         "steps, so the result matches an uninterrupted "
+                         "run (DESIGN.md §14)")
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        raise SystemExit("--resume needs --ckpt-dir")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh() if args.smoke else make_production_mesh()
@@ -66,6 +77,13 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
         opt = steps_lib.make_optimizer(tcfg)
         opt_state = opt.init(params)
+        t_start = 0
+        if args.resume:
+            restored = steps_lib.restore_train_state(args.ckpt_dir, model,
+                                                     tcfg, mesh)
+            if restored is not None:
+                params, opt_state, t_start = restored
+                print(f"resumed from step {t_start}", flush=True)
         batch = make_batch(cfg, args.batch, args.seq)
         if args.scan_rounds > 0:
             # scan engine: one dispatch per n-round chunk, channels +
@@ -88,18 +106,28 @@ def main():
                     lambda x: x[t0_round:t0_round + m], span)
                 return scan_steps[m](params, opt_state, batch, ctxs)
 
+            if t_start % n:
+                raise SystemExit(
+                    f"--resume step {t_start} does not land on a "
+                    f"--scan-rounds {n} chunk boundary; rerun with the "
+                    f"cadence the checkpoints were saved with")
             for t0_round in range(0, args.steps, n):
                 m = min(n, args.steps - t0_round)
+                if t0_round + m <= t_start:
+                    continue
                 t0 = time.time()
                 params, opt_state, metrics = run_chunk(t0_round, m)
                 loss = float(metrics["loss"][-1])
                 print(f"rounds {t0_round:4d}..{t0_round + m - 1} "
                       f"loss={loss:.4f} ({time.time()-t0:.2f}s)",
                       flush=True)
+                if args.ckpt_dir:
+                    steps_lib.save_train_state(args.ckpt_dir, t0_round + m,
+                                               params, opt_state)
         else:
             step = jax.jit(steps_lib.make_train_step(model, tcfg, mesh),
                            donate_argnums=(0, 1))
-            for t in range(args.steps):
+            for t in range(t_start, args.steps):
                 ctx = steps_lib.default_round_ctx(mesh, seed=t)
                 t0 = time.time()
                 params, opt_state, metrics = step(params, opt_state,
@@ -107,9 +135,13 @@ def main():
                 loss = float(metrics["loss"])
                 print(f"step {t:4d} loss={loss:.4f} "
                       f"({time.time()-t0:.2f}s)", flush=True)
+                if args.ckpt_dir and args.ckpt_every \
+                        and (t + 1) % args.ckpt_every == 0:
+                    steps_lib.save_train_state(args.ckpt_dir, t + 1,
+                                               params, opt_state)
         if args.ckpt_dir:
-            from repro.checkpoint import save
-            path = save(args.ckpt_dir, args.steps, params)
+            path = steps_lib.save_train_state(args.ckpt_dir, args.steps,
+                                              params, opt_state)
             print(f"saved checkpoint: {path}")
 
 

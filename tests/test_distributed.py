@@ -129,6 +129,79 @@ SCRIPT_PACKED_MAC = textwrap.dedent("""
 """)
 
 
+SCRIPT_LARGE_D_UPLINK = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.obcsaa import OBCSAAConfig, compress_chunks, shardmap_compress
+
+    # zoo-scale packed uplink (DESIGN.md §14): full shardmap_compress ->
+    # psum_bits_mac pipeline at D = 4.19M on the 8-worker mesh must equal
+    # the single-device f32 symbol reference bit for bit. K*b_t = 0.5 is a
+    # power of two, so every scaled int32 MAC value is exactly
+    # representable in f32.
+    U, CH, S = 8, 8192, 256
+    D = 512 * CH
+    cfg = OBCSAAConfig(chunk=CH, measure=S, topk=64, packed=True,
+                       spmd_topk=True, bisect_iters=20)
+    mesh = jax.make_mesh((8,), ("data",))
+    grads = jnp.stack([
+        0.1 * jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(0), u),
+                                (D,), jnp.float32) for u in range(U)])
+    beta = (jax.random.uniform(jax.random.PRNGKey(1), (U,)) > 0.25)
+    beta = beta.astype(jnp.float32)
+    bt = jnp.float32(0.5)
+
+    def per_worker(g, beta_all):
+        widx = jax.lax.axis_index("data")
+        return shardmap_compress(cfg, g[0], ("data",),
+                                 k_weight=jnp.float32(1.0),
+                                 beta_i=beta_all[widx], b_t=bt)
+
+    f = jax.shard_map(per_worker, mesh=mesh, axis_names={"data"},
+                      in_specs=(P("data"), P()), out_specs=(P(), P(), P()),
+                      check_vma=False)
+    with jax.set_mesh(mesh):
+        y, ksum, mag_sum = jax.jit(f)(grads, beta)
+
+    # single-device f32 reference: same compression, f32 +-1 symbols,
+    # plain weighted sums over the worker axis
+    ref_cfg = dataclasses.replace(cfg, packed=False)
+
+    @jax.jit
+    def reference(grads, beta):
+        signs, mags = jax.vmap(
+            lambda g: compress_chunks(ref_cfg, g, None))(grads)
+        y = jnp.einsum("u,ucs->cs", beta * bt, signs)
+        return y, jnp.sum(beta), jnp.einsum("u,uc->c", beta, mags)
+
+    y_ref, ksum_ref, mag_ref = reference(grads, beta)
+    assert y.shape == (D // CH, S)
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref)), "y"
+    assert np.array_equal(np.asarray(ksum), np.asarray(ksum_ref)), "ksum"
+    assert np.array_equal(np.asarray(mag_sum), np.asarray(mag_ref)), "mags"
+    print("NNZROWS", int(jnp.sum(jnp.any(y != 0, axis=1))))
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_packed_uplink_large_d_bitwise_vs_single_device():
+    """Satellite of the zoo PR: the packed compress+MAC uplink at D=4.19M
+    (the ≥1B bench wire path, scaled to CI) on the 8-device mesh is
+    bitwise equal to the single-device f32 symbol reference."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", SCRIPT_LARGE_D_UPLINK],
+                       env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "OK" in r.stdout
+
+
 @pytest.mark.slow
 def test_packed_mac_psum_matches_einsum_on_mesh():
     """Worker-axis popcount-style MAC (DESIGN.md §13): int32 psum of
