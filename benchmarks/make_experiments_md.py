@@ -217,6 +217,29 @@ def zoo_table() -> str:
     return "\n".join(lines)
 
 
+def serve_rows():
+    """serve_bench rows: parity gates + 10k/100k SLO rows under
+    ``serve:v1`` plus the 1M-cell row under ``serve:v1:full``
+    (regenerated by ``python -m benchmarks.serve_bench --full``), both
+    from experiments/bench_cache.json; run fresh once if the cache is
+    empty."""
+    from benchmarks.common import cached_rows
+    rows = cached_rows("serve:v1")
+    if rows is None:
+        from benchmarks import serve_bench
+        return serve_bench.main()
+    from benchmarks.serve_bench import FULL_KEY
+    return rows + (cached_rows(FULL_KEY) or [])
+
+
+def serve_table() -> str:
+    lines = ["| run | mean ms/tick | result |", "|---|---|---|"]
+    for name, us, derived in serve_rows():
+        lines.append(f"| {name.split('/', 1)[-1]} | {us / 1e3:,.1f} | "
+                     f"{derived or '-'} |")
+    return "\n".join(lines)
+
+
 def packed_table() -> str:
     """Bytes moved through the 1-bit signal path, f32 vs the packed uint32
     codec (DESIGN.md §13) — static accounting at paper geometry
@@ -304,6 +327,21 @@ def main():
         "D_c=16384 / S_c=32 / κ_c=8) with measured rounds/sec; it is "
         "regenerated by `python -m benchmarks.zoo_bench --full` and "
         "replayed from the cache otherwise.\n\n" + zoo_table()
+        + "\n\n## Fleet scheduling-service SLO (repro.serve, "
+        "DESIGN.md §15)\n\n"
+        "Steady-state serve loop — fade step → CSI reports → dirty set → "
+        "pow2 compaction → batched solve → cache — at ρ=0.999, half the "
+        "fleet reporting per tick, 5% movement threshold. p50/p99 are "
+        "per-tick schedule latencies over the timed window after an "
+        "untimed warm-up; `solved_per_s` counts schedules actually "
+        "re-solved, `served_per_s` counts cells served (solved + cache "
+        "hits). The two parity rows are the CI gates: the threshold-0 "
+        "served cache is bitwise equal to a cold full-fleet solve (both "
+        "solvers), and dual-warm-started ADMM converges to the same β "
+        "bitwise as cold-start (iteration counts alongside — warm starts "
+        "do NOT speed this solver up, see DESIGN.md §15). The 1M-cell "
+        "row is regenerated by `python -m benchmarks.serve_bench --full` "
+        "and replayed from the cache otherwise.\n\n" + serve_table()
         + "\n\n## Dry-run table\n\n" + dryrun_table()
         + "\n\n## Roofline table (single-pod, 256 chips)\n\n"
         + roofline_table() + "\n")

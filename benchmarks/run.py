@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig1..fig5,kernels,"
                          "decoders,sched,engine,theory,ablations,roofline,"
-                         "zoo")
+                         "zoo,serve")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
     rounds = 300 if args.full else 60
@@ -28,7 +28,7 @@ def main() -> None:
                             fig1_sparsification, fig2_dimension,
                             fig3_scheduling, fig4_samples, fig5_noise,
                             kernels_bench, roofline, sched_bench,
-                            theory_bench, zoo_bench)
+                            serve_bench, theory_bench, zoo_bench)
 
     from benchmarks.common import cached_suite
 
@@ -46,12 +46,15 @@ def main() -> None:
         "ablations": lambda: ablations.main(rounds=max(40, rounds // 2)),
         "roofline": roofline.main,   # cheap, always fresh (reads dryrun/)
         "zoo": lambda: zoo_bench.main(full=args.full),
+        "serve": lambda: serve_bench.main(full=args.full),
     }
-    # kernels + sched + engine + theory + roofline + zoo always run fresh:
-    # they are the CI smoke steps and must exercise real code, not replay
-    # experiments/bench_cache.json (zoo manages its own ≥1B cached row;
-    # its CI-scale rows — including the bitwise parity gate — run live)
-    fresh = {"kernels", "sched", "engine", "theory", "roofline", "zoo"}
+    # kernels + sched + engine + theory + roofline + zoo + serve always
+    # run fresh: they are the CI smoke steps and must exercise real code,
+    # not replay experiments/bench_cache.json (zoo and serve manage their
+    # own expensive cached rows — ≥1B zoo, 1M-cell serve — while their
+    # CI-scale rows, including every parity gate, run live)
+    fresh = {"kernels", "sched", "engine", "theory", "roofline", "zoo",
+             "serve"}
     # fig/ablation suites moved to engine arms sweeps (v2): the v1 cache
     # rows were produced by the pre-engine loop AND its half-normal
     # channel draw — keys are bumped so a full run regenerates them

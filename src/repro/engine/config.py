@@ -62,6 +62,13 @@ class FLConfig:
     # round indices, so no generator state needs serializing.
     ckpt_dir: Optional[str] = None
     ckpt_resume: bool = False
+    # Dual warm-starting (DESIGN.md §15): carry the ADMM multipliers of
+    # round t's schedule in the scan state (next to prev-β) and seed round
+    # t+1's solve with them. Only meaningful for the admm engine
+    # schedulers; the solver re-initializes the primal every round, so the
+    # per-round β is bitwise-unchanged (the serve-bench parity flag) — OFF
+    # keeps the carry's ``sched_duals`` leaf None (pre-PR-8 trace).
+    sched_warm_duals: bool = False
     # Measured-aggregation-error probe (repro.theory, DESIGN.md §12): emit
     # ‖ĝ−ḡ‖² per round next to the predicted Theorem-1 budget. Costs one
     # extra dense (U, D) reduction per round; OFF by default — disabled,

@@ -37,7 +37,7 @@ from repro.core.sparsify import (flatten_pytree, topk_sparsify,
                                  topk_sparsify_bisect)
 from repro.engine.config import ENGINE_SCHEDULERS, FLConfig
 from repro.engine.state import Arms, EngineState, RoundStats
-from repro.sched.admm import admm_solve_batched_jit
+from repro.sched.admm import AdmmDuals, admm_solve_batched_jit
 from repro.sched.greedy import greedy_solve_batched
 from repro.sched.problem import BatchedProblem
 from repro.theory.bounds import error_budget
@@ -59,7 +59,10 @@ class EngineFns(NamedTuple):
     """The built round functions + static geometry."""
     init_state: Callable    # (params, arm) -> EngineState
     fade_step: Callable     # (fade, key) -> (h, fade')
-    schedule: Callable      # (h, k_weights, noise_var, p_max) -> (β, b_t)
+    # (h, k_weights, noise_var, p_max, duals=None) -> (β, b_t, duals')
+    # duals' is the exit AdmmDuals when FLConfig.sched_warm_duals is
+    # active, else None — the carry leaf stays fixed per build
+    schedule: Callable
     round_given_schedule: Callable
     full_round: Callable    # (state, arm, worker_data, k_weights, t)
     D: int
@@ -119,6 +122,9 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
     # Eq. 19 models the 1-bit CS pipeline, so the budget is only emitted
     # for the obcsaa aggregator (None leaf otherwise — fixed per build)
     track_bound = cfg.aggregator == "obcsaa"
+    # Dual warm-starting only applies where ADMM actually runs per round
+    warm_duals = (cfg.sched_warm_duals and cfg.aggregator != "perfect"
+                  and cfg.scheduler in ("admm_batched", "admm_batched_jit"))
 
     def init_state(params, arm: Arms) -> EngineState:
         _, fade0 = chan.draw_fades(
@@ -127,29 +133,42 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
             params=params, opt_state=opt.init(params), fade=fade0,
             prev_beta=-jnp.ones((U,), jnp.float32),
             decode_x0=jnp.zeros((n_chunks, ob.chunk)) if warm else None,
-            residual=jnp.zeros((U, D)) if ef else None)
+            residual=jnp.zeros((U, D)) if ef else None,
+            sched_duals=AdmmDuals.zeros((U,)) if warm_duals else None)
 
     def fade_step(fade, key):
         return chan.draw_fades(key, rho=rho, prev=fade)
 
-    def schedule(h, k_weights, noise_var, p_max):
-        """P2 for one round's channels, inside the trace (B = 1)."""
+    def schedule(h, k_weights, noise_var, p_max, duals=None):
+        """P2 for one round's channels, inside the trace (B = 1).
+        ``duals`` (a (U,)-leaf ``AdmmDuals`` | None) warm-starts the ADMM
+        multipliers from the previous round's schedule; the returned
+        triple carries the exit duals back when warm-starting is active
+        (None otherwise, so the scan carry leaf is fixed per build)."""
         bp = BatchedProblem.from_arrays(
             h[None], k_weights[None], p_max, noise_var, D=D, S=ob.measure,
             kappa=ob.topk, const=cfg.const)
+        duals_out = None
         if cfg.scheduler == "all":
             beta = jnp.ones_like(bp.h)
             b_t = bp.optimal_bt(beta)
         elif cfg.scheduler == "greedy_batched":
             beta, b_t, _ = greedy_solve_batched(bp, scfg)
         elif cfg.scheduler in ("admm_batched", "admm_batched_jit"):
-            beta, b_t, _ = admm_solve_batched_jit(bp, scfg)
+            if warm_duals and duals is not None:
+                d1 = jax.tree_util.tree_map(lambda l: l[None], duals)
+                beta, b_t, _, info = admm_solve_batched_jit(
+                    bp, scfg, duals=d1, return_duals=True)
+                duals_out = jax.tree_util.tree_map(lambda l: l[0],
+                                                   info.duals)
+            else:
+                beta, b_t, _ = admm_solve_batched_jit(bp, scfg)
         else:
             raise ValueError(
                 f"scheduler {cfg.scheduler!r} cannot run inside the "
                 f"engine scan (jittable: {ENGINE_SCHEDULERS}); use the "
                 "host reference path")
-        return beta[0], b_t[0]
+        return beta[0], b_t[0], duals_out
 
     def ef_split(grads, residual):
         """EF correction + residual update (Stich et al., paper ref [37]).
@@ -171,10 +190,15 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
         return corrected, corrected - sp[:, :D], sp
 
     def round_given_schedule(state: EngineState, arm: Arms, worker_data,
-                             k_weights, t, h, fade, beta, b_t):
+                             k_weights, t, h, fade, beta, b_t,
+                             sched_duals=None):
         """Eq. 3 → 6-7 → 10 → 13 → 43 → 14 for one round, with the
         schedule already decided (the host path injects β from the
-        registry here; the engine computes it in ``full_round``)."""
+        registry here; the engine computes it in ``full_round``).
+        ``sched_duals`` is the exit-multiplier state of the β solve,
+        stored in the carry for the next round's warm start (must be an
+        ``AdmmDuals`` whenever ``sched_warm_duals`` built the carry with
+        one — the scan structure is fixed per build)."""
         grads = stacked_grads(loss_fn, state.params, worker_data)
         residual = state.residual
         presparse = False
@@ -212,7 +236,7 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
                                        arm.lr)
         new_state = EngineState(params=params, opt_state=opt_state,
                                 fade=fade, prev_beta=beta, decode_x0=x0,
-                                residual=residual)
+                                residual=residual, sched_duals=sched_duals)
         # predicted Theorem-1 budget at this round's operating point
         # (repro.theory, DESIGN.md §12) — pure closed-form scalar math on
         # (β, b_t, σ²), no effect on the training dataflow above
@@ -243,10 +267,12 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
         if cfg.aggregator == "perfect":
             beta = jnp.ones((U,), jnp.float32)
             b_t = jnp.float32(1.0)
+            duals = None
         else:
-            beta, b_t = schedule(h, k_weights, arm.noise_var, arm.p_max)
+            beta, b_t, duals = schedule(h, k_weights, arm.noise_var,
+                                        arm.p_max, state.sched_duals)
         return round_given_schedule(state, arm, worker_data, k_weights, t,
-                                    h, fade, beta, b_t)
+                                    h, fade, beta, b_t, duals)
 
     return EngineFns(init_state=init_state, fade_step=fade_step,
                      schedule=schedule,

@@ -31,6 +31,10 @@ class EngineState(NamedTuple):
     prev_beta: jnp.ndarray             # (U,) f32; -1 before round 0
     decode_x0: Optional[jnp.ndarray]   # (n_chunks, D_c) warm start | None
     residual: Optional[jnp.ndarray]    # (U, D) EF residuals | None
+    # ADMM multipliers of the last solved schedule ((U,)-leaf AdmmDuals),
+    # carried next to prev_beta to warm-start the next round's P2 under
+    # fade coherence (FLConfig.sched_warm_duals; DESIGN.md §15) | None
+    sched_duals: Any = None
 
 
 class RoundStats(NamedTuple):

@@ -135,12 +135,14 @@ class FederatedTrainer:
         k_t = jax.random.fold_in(arm.key, t)
         h, fade = self._fade_jit(self._state.fade,
                                  jax.random.fold_in(k_t, 0))
+        duals = None
         if cfg.aggregator == "perfect":
             beta = jnp.ones((U,), jnp.float32)
             b_t = jnp.float32(1.0)
         elif self._sched_jit is not None:
-            beta, b_t = self._sched_jit(h, self._engine.k_weights,
-                                        arm.noise_var, arm.p_max)
+            beta, b_t, duals = self._sched_jit(h, self._engine.k_weights,
+                                               arm.noise_var, arm.p_max,
+                                               self._state.sched_duals)
         else:
             beta_np, bt = schedule_round(
                 cfg.scheduler, np.asarray(h, np.float64), self.k_weights,
@@ -149,7 +151,7 @@ class FederatedTrainer:
             b_t = jnp.float32(bt)
         self._state, stats = self._round_jit(
             self._state, arm, self.worker_data, self._engine.k_weights,
-            jnp.int32(t), h, fade, beta, b_t)
+            jnp.int32(t), h, fade, beta, b_t, duals)
         self.sched_logs.append(SchedLog(
             t, int(stats.n_scheduled), float(stats.b_t),
             float(np.asarray(stats.budget.rt()))

@@ -5,10 +5,16 @@
 
 Uses the same step builders as the dry-run; with --smoke the reduced config
 trains on synthetic token streams over a host mesh.
+
+``--serve`` hands the remaining arguments to the continuous scheduling
+service instead (``repro.serve``, DESIGN.md §15):
+
+  PYTHONPATH=src python -m repro.launch.train --serve --cells 10000
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -35,6 +41,12 @@ def make_batch(cfg, B, S, rng_seed=0):
 
 
 def main():
+    if "--serve" in sys.argv[1:]:
+        # dispatch to the scheduling-service CLI with the rest of the
+        # arguments (repro.serve owns its own parser)
+        from repro.serve.cli import main as serve_main
+        argv = [a for a in sys.argv[1:] if a != "--serve"]
+        raise SystemExit(serve_main(argv))
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--smoke", action="store_true",

@@ -14,7 +14,9 @@ Layering: this package imports ``repro.kernels`` and the analysis layer
 and ``repro.fl`` consume it (``repro.sched.reference`` is the NumPy
 parity oracle the batched solvers are tested against).
 """
-from repro.sched.admm import admm_solve_batched, admm_solve_batched_jit
+from repro.sched.admm import (AdmmDuals, AdmmSolveInfo, admm_solve_batched,
+                              admm_solve_batched_jit)
+from repro.sched.compaction import MIN_BUCKET, bucket, pad_to_bucket, take
 from repro.sched.config import SchedConfig
 from repro.sched.greedy import greedy_solve_batched, prefix_sweep
 from repro.sched.problem import BatchedProblem, rt_from_stats
@@ -23,15 +25,18 @@ from repro.sched.reference import (Problem, admm_solve, enumerate_solve,
                                    optimal_bt)
 from repro.sched.registry import (Scheduler, get_scheduler, list_schedulers,
                                   register_scheduler, schedule)
-from repro.sched.scenario import (ScenarioConfig, generate, generate_fades,
-                                  round_problems)
+from repro.sched.scenario import (FadeState, ScenarioConfig, generate,
+                                  generate_fades, init_fades, magnitudes,
+                                  round_problems, step_fades)
 
 __all__ = [
-    "BatchedProblem", "Problem", "ScenarioConfig", "SchedConfig",
+    "AdmmDuals", "AdmmSolveInfo", "BatchedProblem", "FadeState", "MIN_BUCKET",
+    "Problem", "ScenarioConfig", "SchedConfig",
     "Scheduler", "admm_solve", "admm_solve_batched",
-    "admm_solve_batched_jit", "enumerate_solve",
+    "admm_solve_batched_jit", "bucket", "enumerate_solve",
     "generate", "generate_fades", "get_scheduler", "greedy_prefix_bound",
-    "greedy_solve", "greedy_solve_batched", "list_schedulers", "optimal_bt",
+    "greedy_solve", "greedy_solve_batched", "init_fades", "list_schedulers",
+    "magnitudes", "optimal_bt", "pad_to_bucket",
     "prefix_sweep", "register_scheduler", "round_problems", "rt_from_stats",
-    "schedule",
+    "schedule", "step_fades", "take",
 ]

@@ -30,23 +30,56 @@ Faithfulness to the NumPy oracle (``repro.sched.reference.admm_solve``):
 Per-instance parity with the float64 reference is tested at B ≥ 64
 (tests/test_sched.py); the batched path runs float32 on-device, so parity
 is tolerance-based, not bitwise.
+
+Dual warm-starting (DESIGN.md §15): both solvers accept and return the
+ADMM multipliers — ν (the eq. 37 power-constraint prices), ξ (eq. 38
+r = βq coupling) and ζ (eq. 39 q = b consensus, the paper's λ) — as an
+``AdmmDuals`` pytree. Seeding a solve with the duals of a nearby problem
+(the previous service tick's channels, a Gauss-Markov-correlated fade
+draw) starts the multipliers at prices that are already close to optimal,
+so convergence takes fewer outer iterations; the primal state always
+re-initializes from the problem itself, so warm and cold solves converge
+to the same β (the parity flag benchmarks/serve_bench.py gates).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sched.compaction import bucket as _bucket
+from repro.sched.compaction import pad_to_bucket, take as _take
 from repro.sched.config import SchedConfig
 from repro.sched.problem import BatchedProblem, rt_from_stats
 from repro.sched.reference import STALL_PATIENCE, STALL_RTOL
 
 _DEFAULT = SchedConfig()
 _CHUNK = 8          # outer iterations per jitted scan chunk
-_MIN_BUCKET = 8     # smallest compaction bucket
+
+
+class AdmmDuals(NamedTuple):
+    """The Algorithm-2 multiplier state, (B, U) f32 leaves: ν ≥ 0 prices
+    the per-worker power constraints (eq. 37), ξ couples r = βq (eq. 38),
+    ζ enforces the q = b consensus (eq. 39, the reference's λ)."""
+    nu: jnp.ndarray
+    xi: jnp.ndarray
+    zeta: jnp.ndarray
+
+    @classmethod
+    def zeros(cls, shape, dtype=jnp.float32) -> "AdmmDuals":
+        z = jnp.zeros(shape, dtype)
+        return cls(nu=z, xi=z, zeta=z)
+
+
+class AdmmSolveInfo(NamedTuple):
+    """Per-lane solve telemetry returned with ``return_duals=True``:
+    the exit multipliers (warm-start state for the next nearby solve)
+    and the outer-iteration count each lane took to converge."""
+    duals: AdmmDuals
+    iters: jnp.ndarray          # (B,) i32 outer iterations at the break
 
 
 def _bcast(flag, leaf):
@@ -72,14 +105,20 @@ def _greedy_prefix_bound(prob: BatchedProblem, caps) -> jnp.ndarray:
 
 # --- ADMM iteration (batched-native: leaves (B, U), lane scalars (B,)) -------------
 
-def _init_state(prob: BatchedProblem):
+def _init_state(prob: BatchedProblem, duals: Optional[AdmmDuals] = None):
+    """Initial ADMM state; ``duals`` warm-starts the multipliers only —
+    the primal (q, β, b) always re-initializes from the problem, so a
+    warm solve walks to the same fixed point from better prices."""
     caps = prob.caps()
     beta0 = jnp.ones_like(caps)
     b0 = jnp.maximum(prob.optimal_bt(beta0), 1e-6)          # (B,)
     z = jnp.zeros_like(caps)
+    nu, xi, zeta = (z, z, z) if duals is None else (
+        duals.nu.astype(caps.dtype), duals.xi.astype(caps.dtype),
+        duals.zeta.astype(caps.dtype))
     B = caps.shape[:-1]
     # (q, beta, b, nu, xi, zeta, done, it, prim_best, stall)
-    return (b0[..., None] * jnp.ones_like(caps), beta0, b0, z, z, z,
+    return (b0[..., None] * jnp.ones_like(caps), beta0, b0, nu, xi, zeta,
             jnp.zeros(B, bool), jnp.zeros(B, jnp.int32),
             jnp.full(B, jnp.inf, jnp.float32), jnp.zeros(B, jnp.int32))
 
@@ -146,8 +185,8 @@ def _outer_iter(prob: BatchedProblem, cfg: SchedConfig, st):
 
 
 @functools.partial(jax.jit, static_argnames="cfg")
-def _init_batched(prob, cfg):
-    return _init_state(prob)
+def _init_batched(prob, cfg, duals=None):
+    return _init_state(prob, duals)
 
 
 @functools.partial(jax.jit, static_argnames="cfg")
@@ -233,10 +272,11 @@ def _results_batched(prob, beta):
     return beta, b_t, prob.rt(beta, b_t)
 
 
-@functools.partial(jax.jit, static_argnames="cfg")
+@functools.partial(jax.jit, static_argnames=("cfg", "return_duals"))
 def admm_solve_batched_jit(prob: BatchedProblem,
-                           cfg: Optional[SchedConfig] = None
-                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                           cfg: Optional[SchedConfig] = None,
+                           duals: Optional[AdmmDuals] = None,
+                           return_duals: bool = False):
     """Fully device-resident Algorithm 2 — the scan-safe sibling of
     ``admm_solve_batched`` (callable inside ``lax.scan``/``vmap``, e.g.
     from the FL engine's round body, DESIGN.md §11).
@@ -248,7 +288,11 @@ def admm_solve_batched_jit(prob: BatchedProblem,
     vmapped over all lanes with the greedy-prefix early exit applied as a
     mask. Use the compacted entry for large fleets (it pays for the
     convergence distribution, not the straggler); use this one where the
-    call must stay inside a jitted program."""
+    call must stay inside a jitted program.
+
+    ``duals`` warm-starts the multipliers (the engine carries them round
+    to round next to prev-β, DESIGN.md §15); ``return_duals=True`` also
+    returns an ``AdmmSolveInfo`` with the exit duals + iteration counts."""
     cfg = cfg or _DEFAULT
 
     def chunk(st):
@@ -261,12 +305,17 @@ def admm_solve_batched_jit(prob: BatchedProblem,
     def not_done(st):
         return ~jnp.all(st[6] | (st[7] >= cfg.max_iters))
 
-    st = jax.lax.while_loop(not_done, chunk, _init_state(prob))
+    st = jax.lax.while_loop(not_done, chunk, _init_state(prob, duals))
     beta, best0, active = _project_batched(prob, st[1])
     polished = jax.vmap(lambda p, b, r0: _polish_one(p, cfg, b, r0))(
         prob, beta, best0)
     beta = jnp.where(active[..., None], polished, beta)
-    return _results_batched(prob, beta)
+    out = _results_batched(prob, beta)
+    if return_duals:
+        info = AdmmSolveInfo(duals=AdmmDuals(nu=st[3], xi=st[4], zeta=st[5]),
+                             iters=st[7])
+        return out + (info,)
+    return out
 
 
 def _finalize_batched(prob, cfg, beta):
@@ -275,21 +324,12 @@ def _finalize_batched(prob, cfg, beta):
     beta, best0, active = _project_batched(prob, beta)
     act = np.flatnonzero(np.asarray(active))
     if act.size:
-        bucket = _bucket(act.size)
-        pad = np.concatenate([act, np.repeat(act[:1], bucket - act.size)])
+        pad, _ = pad_to_bucket(act)
         beta = _polish_apply(prob, cfg, beta, best0, jnp.asarray(pad))
     return _results_batched(prob, beta)
 
 
-# --- host-driven compaction loop ---------------------------------------------------
-
-def _bucket(n: int) -> int:
-    return max(_MIN_BUCKET, 1 << (n - 1).bit_length())
-
-
-def _take(tree, idx):
-    return jax.tree_util.tree_map(lambda l: l[idx], tree)
-
+# --- host-driven compaction loop (bucketing: sched/compaction.py) ------------------
 
 @jax.jit
 def _compact(sub, st, idx, invalid):
@@ -302,38 +342,54 @@ def _compact(sub, st, idx, invalid):
 
 
 def admm_solve_batched(prob: BatchedProblem,
-                       cfg: Optional[SchedConfig] = None
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                       cfg: Optional[SchedConfig] = None,
+                       duals: Optional[AdmmDuals] = None,
+                       return_duals: bool = False):
     """Solve B independent P2 instances in one device-resident pass.
 
-    Returns (β (B, U), b_t (B,), R_t (B,))."""
+    Returns (β (B, U), b_t (B,), R_t (B,)); with ``return_duals=True``
+    also an ``AdmmSolveInfo`` whose exit multipliers warm-start the next
+    nearby solve (the serve loop carries them tick to tick, DESIGN.md
+    §15) and whose ``iters`` count each lane's outer iterations."""
     cfg = cfg or _DEFAULT
-    B = prob.B
-    beta_out = np.zeros((B, prob.U), np.float32)
+    B, U = prob.B, prob.U
+    beta_out = np.zeros((B, U), np.float32)
+    # exit-state collection: (nu, xi, zeta) at st[3:6], iterations at st[7]
+    dual_out = [np.zeros((B, U), np.float32) for _ in range(3)]
+    iters_out = np.zeros(B, np.int32)
     idx = np.arange(B)                       # original slot of each lane
     valid = np.ones(B, bool)                 # False for pad duplicates
-    sub, st = prob, _init_batched(prob, cfg)
+    sub, st = prob, _init_batched(prob, cfg, duals)
+
+    def retire(fin):
+        slots = idx[fin]
+        beta_out[slots] = np.asarray(st[1])[fin]
+        for out, leaf in zip(dual_out, st[3:6]):
+            out[slots] = np.asarray(leaf)[fin]
+        iters_out[slots] = np.asarray(st[7])[fin]
+
     while True:
         st = _chunk_batched(sub, cfg, st)
         done = np.asarray(st[6]) | (np.asarray(st[7]) >= cfg.max_iters)
         active = ~done & valid
         if not active.any():
-            fin = done & valid
-            beta_out[idx[fin]] = np.asarray(st[1])[fin]
+            retire(done & valid)
             break
-        bucket = _bucket(int(active.sum()))
-        if bucket < idx.size:                # compact: retire finished lanes
-            fin = done & valid
-            beta_out[idx[fin]] = np.asarray(st[1])[fin]
-            keep = np.flatnonzero(active)
-            # pad to the pow2 bucket with duplicate lanes (frozen, invalid
+        if _bucket(int(active.sum())) < idx.size:
+            # compact: retire finished lanes, gather the rest into the
+            # next pow2 bucket (pad duplicates arrive pre-frozen/invalid
             # — they never write results)
-            pad = np.concatenate([keep, np.repeat(keep[:1],
-                                                  bucket - keep.size)])
+            retire(done & valid)
+            pad, real = pad_to_bucket(np.flatnonzero(active))
             idx = idx[pad]
-            valid = np.zeros(bucket, bool)
-            valid[:keep.size] = True
+            valid = real
             sub, st = _compact(sub, st, jnp.asarray(pad),
                                jnp.asarray(~valid))
     beta = jnp.asarray(beta_out)
-    return _finalize_batched(prob, cfg, beta)
+    out = _finalize_batched(prob, cfg, beta)
+    if return_duals:
+        info = AdmmSolveInfo(
+            duals=AdmmDuals(*(jnp.asarray(d) for d in dual_out)),
+            iters=jnp.asarray(iters_out))
+        return out + (info,)
+    return out

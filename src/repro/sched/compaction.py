@@ -1,0 +1,60 @@
+"""Pow2 convergence-compaction bucketing (DESIGN.md §10/§15).
+
+The fleet solvers never pay for a ragged active set: host-side callers
+gather the lanes that still need device work (unconverged ADMM instances,
+dirty serve-loop cells) into the next power-of-two bucket, padded by
+repeating the first entry. The invariants every consumer relies on:
+
+- **Bounded jit entries.** Bucket sizes are powers of two floored at
+  ``MIN_BUCKET``, so a caller dispatching per-bucket jitted programs
+  compiles at most log2(B) shapes, however the active-set size drifts.
+- **Collision-safe scatters.** Pad lanes duplicate the first real index:
+  a deterministic solver maps identical inputs to identical outputs, so
+  scattering a bucket's results back with ``.at[pad].set`` writes the
+  same value through every duplicate — no masking needed on the write
+  path. The ``valid`` mask marks the real lanes for callers that do need
+  to treat pads specially (e.g. the ADMM loop pre-freezes them).
+
+Shared by ``sched/admm.py`` (convergence compaction between scan chunks,
+flip-polish gather) and the continuous scheduling service
+(``repro.serve``: dirty-cell batching) — extracted so both bucket
+identically; the refactor is pinned bitwise by tests/test_serve.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+
+MIN_BUCKET = 8     # smallest compaction bucket
+
+
+def bucket(n: int, min_bucket: int = MIN_BUCKET) -> int:
+    """Smallest power of two ≥ ``n``, floored at ``min_bucket``."""
+    if n <= 0:
+        raise ValueError(f"bucket needs n >= 1, got {n}")
+    return max(min_bucket, 1 << (n - 1).bit_length())
+
+
+def take(tree, idx):
+    """Gather every leaf of a pytree at ``idx`` (lane gather)."""
+    return jax.tree_util.tree_map(lambda l: l[idx], tree)
+
+
+def pad_to_bucket(idx: np.ndarray, min_bucket: int = MIN_BUCKET
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad an active-lane index set to its pow2 bucket.
+
+    Returns ``(pad, valid)``: ``pad`` is ``idx`` followed by repeats of
+    ``idx[0]`` up to ``bucket(len(idx))`` entries, ``valid`` marks the
+    real (non-duplicate) lanes. See the module docstring for why the
+    duplicate-pad convention makes result scatters collision-safe."""
+    idx = np.asarray(idx)
+    if idx.size == 0:
+        raise ValueError("pad_to_bucket needs at least one active lane")
+    size = bucket(int(idx.size), min_bucket)
+    pad = np.concatenate([idx, np.repeat(idx[:1], size - idx.size)])
+    valid = np.zeros(size, bool)
+    valid[:idx.size] = True
+    return pad, valid

@@ -20,13 +20,23 @@ arXiv:2303.11319):
   the per-worker amplitude, i.e. a per-worker power budget once pushed
   through eq. 10's P_i^Max.
 
-Everything is jax: one ``lax.scan`` over rounds, PRNG-keyed, jit-able, so
-trajectory generation lives on device next to the solvers it feeds.
+Everything is jax: PRNG-keyed, jit-able, so trajectory generation lives
+on device next to the solvers it feeds. The fade process is exposed two
+ways around one transition kernel: ``init_fades``/``step_fades`` advance
+a ``FadeState`` one round at a time (the continuous scheduling service
+ingests channel updates tick by tick, DESIGN.md §15), and
+``generate_fades`` is literally that step's jitted executable chained —
+so a stepped trajectory is bitwise-equal to the whole-trajectory draw at
+every round (pinned by tests/test_serve.py). The step keys come from
+``fold_in(key, t)``, making round t's draw a pure function of (state,
+t) with no key-splitting chain to replay.
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,27 +93,73 @@ class ScenarioConfig:
                          "(gauss_markov|jakes|iid)")
 
 
+class FadeState(NamedTuple):
+    """The incremental fade process: current complex fades ``g``
+    ((cells, U) complex64), the base PRNG key of the innovation stream,
+    and the index ``t`` of the round ``g`` belongs to. Advance with
+    ``step_fades``; the state is a scan carry (fixed structure/shape),
+    so the serve loop and the trajectory generator share it as-is."""
+    g: jnp.ndarray
+    key: jnp.ndarray
+    t: jnp.ndarray            # i32 round index of g
+
+
+def init_fades(cfg: ScenarioConfig, key) -> FadeState:
+    """Round-0 fade state: one stationary CN(0, 1) draw per
+    (cell, worker), plus the innovation key for the steps to come."""
+    k0, kw = jax.random.split(key)
+    g0 = draw_cn(k0, (cfg.cells, cfg.workers)).astype(jnp.complex64)
+    return FadeState(g=g0, key=kw, t=jnp.int32(0))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _step_fades_jit(cfg: ScenarioConfig, state: FadeState) -> FadeState:
+    k = jax.random.fold_in(state.key, state.t)
+    g = gauss_markov_step(state.g, k, jnp.float32(cfg.rho))
+    return FadeState(g=g.astype(jnp.complex64), key=state.key,
+                     t=state.t + 1)
+
+
+def step_fades(cfg: ScenarioConfig, state: FadeState) -> FadeState:
+    """One Gauss-Markov round: g_{t+1} = ρ g_t + √(1−ρ²) w — see
+    ``core/channel.py`` — with the innovation keyed ``fold_in(key, t)``
+    so step t is a pure function of the state, no trajectory-length key
+    split to precompute. Always runs the one cached jitted executable:
+    ``generate_fades`` chains the very same executable, which is what
+    makes stepped and whole-trajectory draws bitwise-equal (XLA may
+    compile the same arithmetic to different fusions in different
+    surrounding programs, so sharing the formula is not enough — the
+    parity contract pins the compiled artifact)."""
+    return _step_fades_jit(cfg, state)
+
+
+def magnitudes(state_or_g, gain: Optional[jnp.ndarray] = None,
+               h_min: float = H_MIN) -> jnp.ndarray:
+    """Channel magnitudes |h| f32 from a ``FadeState`` (or raw complex
+    fades), scaled by the static large-scale ``gain`` and clamped to
+    ``h_min`` (bounded channel inversion, core/channel.py)."""
+    g = state_or_g.g if isinstance(state_or_g, FadeState) else state_or_g
+    h = jnp.abs(g)
+    if gain is not None:
+        h = h * gain
+    return jnp.maximum(h.astype(jnp.float32), h_min)
+
+
 def generate_fades(cfg: ScenarioConfig, key) -> jnp.ndarray:
     """Complex small-scale fades, (rounds, cells, U) complex64; stationary
     CN(0, 1) marginal, lag-ℓ autocorrelation ρ^ℓ. The draw and the
     recursion are ``core/channel.py``'s ``draw_cn``/``gauss_markov_step``
     — the same fade model the FL engine steps round by round
-    (DESIGN.md §11), sliced here as a whole trajectory."""
-    rho = jnp.float32(cfg.rho)
-    shape = (cfg.cells, cfg.workers)
-
-    k0, kw = jax.random.split(key)
-    g0 = draw_cn(k0, shape)
-    if cfg.rounds == 1:
-        return g0[None].astype(jnp.complex64)
-
-    def step(g, k):
-        g = gauss_markov_step(g, k, rho)
-        return g, g
-
-    _, gs = jax.lax.scan(step, g0, jax.random.split(kw, cfg.rounds - 1))
-    return jnp.concatenate([g0[None].astype(jnp.complex64),
-                            gs.astype(jnp.complex64)], axis=0)
+    (DESIGN.md §11). This chains the ``step_fades`` executable round by
+    round, so host code stepping a ``FadeState`` itself reproduces the
+    trajectory bitwise at every round (see the ``step_fades`` docstring
+    for why the executable, not just the formula, is shared)."""
+    st = init_fades(cfg, key)
+    gs = [st.g]
+    for _ in range(cfg.rounds - 1):
+        st = step_fades(cfg, st)
+        gs.append(st.g)
+    return jnp.stack(gs, axis=0)
 
 
 def large_scale_gain(cfg: ScenarioConfig, key) -> jnp.ndarray:

@@ -1,0 +1,26 @@
+"""repro.serve — continuous fleet-scheduling service (DESIGN.md §15).
+
+The deployment-facing layer over ``repro.sched``: a service loop that
+ingests streaming per-cell channel state (``sched/scenario.py``'s
+incremental ``step_fades``), keeps a schedule cache keyed on channel
+movement, re-solves only the dirty set — compacted into the shared pow2
+buckets (``sched/compaction.py``) and dispatched to the batched P2
+solvers with dual-warm-started ADMM — and serves (β, b_t, R_t) for the
+whole fleet every tick. Two deterministic invariants pin it (gated in CI
+by benchmarks/serve_bench.py): at ``stale_threshold=0`` the cache equals
+a fresh full-fleet solve bitwise, and dual warm-starting never changes
+β.
+
+Layering: imports ``repro.sched`` (and transitively ``repro.theory``)
+only; ``repro.launch`` and the benchmarks consume it.
+"""
+from repro.serve.service import (fresh_solve, ingest, init_service,
+                                 movement, run_ticks, slo_summary, tick)
+from repro.serve.state import (SERVE_SCHEDULERS, ServeConfig, ServeState,
+                               TickStats)
+
+__all__ = [
+    "SERVE_SCHEDULERS", "ServeConfig", "ServeState", "TickStats",
+    "fresh_solve", "ingest", "init_service", "movement", "run_ticks",
+    "slo_summary", "tick",
+]

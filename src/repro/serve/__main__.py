@@ -1,0 +1,3 @@
+from repro.serve.cli import main
+
+raise SystemExit(main())

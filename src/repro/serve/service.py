@@ -1,0 +1,203 @@
+"""The continuous scheduling service loop (DESIGN.md §15).
+
+One tick = ingestion → dirty set → compaction → solve → cache:
+
+1. **Ingest.** Advance the fleet's Gauss-Markov fade state one round
+   (``sched/scenario.py``'s ``step_fades`` — the same executable the
+   trajectory generator chains) and deliver CSI reports for a
+   ``update_frac`` subset of cells; ``ingest`` accepts out-of-band
+   pushes for externally measured channels.
+2. **Dirty set.** A cell is dirty when its worst-worker relative channel
+   movement since its last solve exceeds ``stale_threshold``. Cells
+   without a new report moved exactly 0 and stay cached, so at
+   threshold 0 the cache serves precisely the schedules a fresh solve
+   of the current channels would produce (the ``fresh_solve`` parity
+   flag benchmarks/serve_bench.py gates in CI).
+3. **Compact + solve.** Dirty cells are padded into the shared pow2
+   buckets (``sched/compaction.py`` — bounded jit entries, collision-safe
+   scatters) and dispatched to the fleet solver; ADMM solves are seeded
+   with each cell's previous exit multipliers (β bitwise-unchanged).
+4. **Cache.** Results scatter back into the served-schedule arrays next
+   to the channels they were solved for; the exit duals ride along for
+   the next warm start.
+
+Everything here is host-orchestrated around the device-resident batched
+solvers — the same host-compaction discipline ``admm_solve_batched``
+itself uses between convergence chunks (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sched.admm import AdmmDuals, admm_solve_batched
+from repro.sched.compaction import pad_to_bucket, take
+from repro.sched.greedy import greedy_solve_batched
+from repro.sched.problem import BatchedProblem
+from repro.sched.scenario import (init_fades, large_scale_gain, magnitudes,
+                                  step_fades)
+from repro.serve.state import ServeConfig, ServeState, TickStats
+
+_REPORT_FOLD = 0x5EED   # fold_in tag separating the CSI-report stream
+                        # from the fade-innovation stream (fold_in(key, t))
+
+
+def _problem(cfg: ServeConfig, h: jnp.ndarray) -> BatchedProblem:
+    return BatchedProblem.from_arrays(
+        h, cfg.k_weights, cfg.p_max, cfg.noise_var, D=cfg.D, S=cfg.S,
+        kappa=cfg.kappa, const=cfg.const)
+
+
+def init_service(cfg: ServeConfig, key) -> ServeState:
+    """Fresh service state: stationary fades, static large-scale gains,
+    and an empty cache — ``h_solved`` starts at zero, so every cell is
+    dirty on the first tick regardless of the report mask (after tick 0
+    the whole fleet holds a served schedule)."""
+    kf, kg = jax.random.split(key)
+    fades = init_fades(cfg.scenario, kf)
+    gain = large_scale_gain(cfg.scenario, kg)
+    cells, U = gain.shape
+    z = jnp.zeros((cells, U), jnp.float32)
+    return ServeState(
+        fades=fades, gain=gain,
+        h_seen=magnitudes(fades, gain, cfg.scenario.h_min),
+        h_solved=z, beta=z, b_t=jnp.zeros((cells,), jnp.float32),
+        rt=jnp.zeros((cells,), jnp.float32),
+        duals=AdmmDuals.zeros((cells, U)) if cfg.warm else None,
+        tick=0)
+
+
+def movement(cfg: ServeConfig, state: ServeState) -> np.ndarray:
+    """(cells,) worst-worker relative channel movement since each cell's
+    last solve: max_i |h_seen − h_solved| / max(h_solved, h_min). Exactly
+    0 for cells whose CSI has not changed — the staleness metric the
+    threshold cuts."""
+    rel = jnp.abs(state.h_seen - state.h_solved) / jnp.maximum(
+        state.h_solved, cfg.scenario.h_min)
+    return np.asarray(jnp.max(rel, axis=-1))
+
+
+def ingest(state: ServeState, cell_ids: Sequence[int],
+           h: jnp.ndarray) -> ServeState:
+    """Out-of-band CSI push: record externally measured channel
+    magnitudes for ``cell_ids``. The cells become dirty on the next tick
+    through the ordinary movement metric — no separate dirty bit."""
+    ids = jnp.asarray(np.asarray(cell_ids, np.int32))
+    h = jnp.asarray(h, jnp.float32)
+    return state._replace(h_seen=state.h_seen.at[ids].set(h))
+
+
+def _solve_dirty(cfg: ServeConfig, state: ServeState,
+                 dirty: np.ndarray) -> Tuple[ServeState, int, float]:
+    """Compact the dirty cells into a pow2 bucket, solve, scatter back.
+    Returns (state', bucket size, mean ADMM iters). Pad lanes duplicate
+    the first dirty cell; the solvers are deterministic, so every
+    duplicate writes the identical value (collision-safe scatter,
+    sched/compaction.py)."""
+    pad, _ = pad_to_bucket(dirty, cfg.min_bucket)
+    pad_j = jnp.asarray(pad)
+    h_sub = state.h_seen[pad_j]
+    prob = _problem(cfg, h_sub)
+    mean_iters = float("nan")
+    duals = state.duals
+    if cfg.scheduler == "greedy_batched":
+        beta_s, bt_s, rt_s = greedy_solve_batched(prob, cfg.sched_cfg)
+    else:
+        duals_in = take(duals, pad_j) if cfg.warm else None
+        beta_s, bt_s, rt_s, info = admm_solve_batched(
+            prob, cfg.sched_cfg, duals=duals_in, return_duals=True)
+        mean_iters = float(info.iters.mean())
+        if cfg.warm:
+            duals = AdmmDuals(*(leaf.at[pad_j].set(new) for leaf, new
+                                in zip(duals, info.duals)))
+    state = state._replace(
+        h_solved=state.h_solved.at[pad_j].set(h_sub),
+        beta=state.beta.at[pad_j].set(beta_s),
+        b_t=state.b_t.at[pad_j].set(bt_s),
+        rt=state.rt.at[pad_j].set(rt_s),
+        duals=duals)
+    return state, len(pad), mean_iters
+
+
+def tick(cfg: ServeConfig, state: ServeState
+         ) -> Tuple[ServeState, TickStats]:
+    """One service tick: fade step → CSI reports → dirty set → bucketed
+    solve → cache update. Dirty-set selection runs on the host (the same
+    host-driven compaction discipline as the ADMM convergence loop)."""
+    cells = state.gain.shape[0]
+    fades = step_fades(cfg.scenario, state.fades)
+    h_now = magnitudes(fades, state.gain, cfg.scenario.h_min)
+    if cfg.update_frac >= 1.0:
+        n_reported, h_seen = cells, h_now
+    else:
+        kr = jax.random.fold_in(
+            jax.random.fold_in(state.fades.key, _REPORT_FOLD), state.tick)
+        report = jax.random.uniform(kr, (cells,)) < cfg.update_frac
+        n_reported = int(jnp.sum(report))
+        h_seen = jnp.where(report[:, None], h_now, state.h_seen)
+    state = state._replace(fades=fades, h_seen=h_seen)
+
+    dirty = np.flatnonzero(movement(cfg, state) > cfg.stale_threshold)
+    n_solved, mean_iters = 0, float("nan")
+    if dirty.size:
+        state, n_solved, mean_iters = _solve_dirty(cfg, state, dirty)
+    stats = TickStats(tick=state.tick, n_reported=n_reported,
+                      n_dirty=int(dirty.size), n_solved=n_solved,
+                      hit_rate=1.0 - dirty.size / cells,
+                      mean_iters=mean_iters)
+    return state._replace(tick=state.tick + 1), stats
+
+
+def fresh_solve(cfg: ServeConfig, state: ServeState
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cold full-fleet solve of the current ``h_seen`` — the oracle the
+    cache is checked against: at ``stale_threshold=0`` the served
+    (β, b_t, R_t) must match this bitwise (both solvers are per-lane
+    bitwise-invariant to batch composition, so bucketed incremental
+    solves and this one-shot solve agree exactly)."""
+    prob = _problem(cfg, state.h_seen)
+    if cfg.scheduler == "greedy_batched":
+        return greedy_solve_batched(prob, cfg.sched_cfg)
+    beta, b_t, rt = admm_solve_batched(prob, cfg.sched_cfg)
+    return beta, b_t, rt
+
+
+def run_ticks(cfg: ServeConfig, state: ServeState, n: int,
+              timed: bool = False
+              ) -> Tuple[ServeState, List[TickStats], List[float]]:
+    """Drive ``n`` ticks; with ``timed`` each tick is wall-clocked after
+    a device sync (the serve-bench latency samples)."""
+    stats: List[TickStats] = []
+    lat: List[float] = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        state, ts = tick(cfg, state)
+        if timed:
+            jax.block_until_ready(state.beta)
+            lat.append(time.perf_counter() - t0)
+        stats.append(ts)
+    return state, stats, lat
+
+
+def slo_summary(stats: Sequence[TickStats], lat: Sequence[float],
+                cells: int) -> dict:
+    """SLO aggregates for a timed run: p50/p99 tick latency, cache-hit
+    rate, and throughput both as schedules actually solved per second
+    and as cells served per second (solved + cache hits)."""
+    lat = np.asarray(lat, np.float64)
+    total = lat.sum()
+    solved = sum(s.n_dirty for s in stats)
+    out = {
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "mean_ms": float(lat.mean() * 1e3),
+        "hit_rate": float(np.mean([s.hit_rate for s in stats])),
+        "solved_per_s": float(solved / total) if total else float("nan"),
+        "served_per_s": float(len(stats) * cells / total)
+        if total else float("nan"),
+    }
+    return out

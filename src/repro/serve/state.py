@@ -1,0 +1,98 @@
+"""Serve-loop configuration and state pytrees (DESIGN.md §15).
+
+``ServeConfig`` is the static side of the service — fleet geometry and
+fade model (a ``ScenarioConfig``), the solver choice, the P2 problem
+constants, and the caching policy (staleness threshold, CSI report
+fraction, warm-start switch). ``ServeState`` is everything that evolves
+tick to tick: the incremental fade process, the newest channel estimates
+next to the channels each cached schedule was solved for (their gap IS
+the staleness metric), the served schedules, and the ADMM exit
+multipliers that warm-start each cell's next solve.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.sched.compaction import MIN_BUCKET
+from repro.sched.config import SchedConfig
+from repro.sched.scenario import FadeState, ScenarioConfig
+from repro.theory.bounds import AnalysisConstants
+
+# Solvers the serve loop can dispatch a dirty bucket to (both fleet-
+# batched, repro.sched registry names; DESIGN.md §10)
+SERVE_SCHEDULERS = ("admm_batched", "greedy_batched")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Static service parameters: one frozen config per deployment."""
+    scenario: ScenarioConfig = field(default_factory=ScenarioConfig)
+    scheduler: str = "admm_batched"     # SERVE_SCHEDULERS
+    sched_cfg: Optional[SchedConfig] = None
+    # Cache policy: a cell re-solves only when its worst-worker relative
+    # channel movement since its last solve exceeds this. 0 = any change
+    # re-solves (the cache-parity flag's setting); non-reporting cells
+    # have movement exactly 0 and always stay cached.
+    stale_threshold: float = 0.05
+    # Seed each ADMM solve with the cell's previous exit multipliers
+    # (admm_batched only; β is bitwise-unaffected — DESIGN.md §15)
+    warm_duals: bool = True
+    # Fraction of cells whose CSI report arrives each tick (streaming
+    # ingestion model; 1.0 = every cell reports every tick)
+    update_frac: float = 1.0
+    min_bucket: int = MIN_BUCKET
+    # P2 problem constants shared by every cell (paper §V operating point)
+    k_weights: float = 3000.0
+    p_max: float = 10.0
+    noise_var: float = 1e-4
+    D: int = 50890
+    S: int = 1000
+    kappa: int = 1000
+    const: AnalysisConstants = field(
+        default_factory=lambda: AnalysisConstants(rho1=200.0, G=1.0))
+
+    def __post_init__(self):
+        if self.scheduler not in SERVE_SCHEDULERS:
+            raise ValueError(f"serve scheduler {self.scheduler!r} not in "
+                             f"{SERVE_SCHEDULERS}")
+        if not 0.0 <= self.update_frac <= 1.0:
+            raise ValueError(f"update_frac must be in [0, 1], got "
+                             f"{self.update_frac}")
+        if self.stale_threshold < 0:
+            raise ValueError(f"stale_threshold must be >= 0, got "
+                             f"{self.stale_threshold}")
+
+    @property
+    def warm(self) -> bool:
+        """Dual warm-starting actually active (admm only)."""
+        return self.warm_duals and self.scheduler == "admm_batched"
+
+
+class ServeState(NamedTuple):
+    """Everything the service carries tick to tick. (cells, U) leaves
+    except where noted; ``duals`` is an ``AdmmDuals`` pytree of
+    (cells, U) leaves, or None when warm-starting is off."""
+    fades: FadeState                   # incremental Gauss-Markov process
+    gain: jnp.ndarray                  # static large-scale gain
+    h_seen: jnp.ndarray                # newest reported |h| per cell
+    h_solved: jnp.ndarray              # |h| each cached schedule used
+    beta: jnp.ndarray                  # served schedules
+    b_t: jnp.ndarray                   # (cells,) served power scalings
+    rt: jnp.ndarray                    # (cells,) served R_t
+    duals: Any                         # AdmmDuals | None
+    tick: int                          # host-side tick counter
+
+
+class TickStats(NamedTuple):
+    """Host-side accounting for one service tick (cache-hit-rate and
+    dirty-set telemetry; latency is timed by the caller around
+    ``tick`` so the service itself stays timing-free)."""
+    tick: int
+    n_reported: int                    # cells whose CSI arrived
+    n_dirty: int                       # cells past the staleness threshold
+    n_solved: int                      # bucket size dispatched (pads incl.)
+    hit_rate: float                    # 1 - dirty/cells
+    mean_iters: float                  # ADMM outer iters (nan for greedy)

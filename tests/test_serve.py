@@ -1,0 +1,321 @@
+"""Continuous scheduling service (repro.serve) + the plumbing it rides on
+(DESIGN.md §15).
+
+The load-bearing claims:
+- ``step_fades`` chained T times is BITWISE the whole-trajectory
+  ``generate_fades`` at every round, and the stepped process keeps the
+  Rayleigh marginal / ρ^ℓ autocorrelation;
+- the shared pow2 compaction utility (sched/compaction.py) buckets
+  exactly as the pre-extraction ADMM loop did (the host-compacted and
+  scan-safe solvers stay bitwise-identical per lane);
+- dual warm-starting returns/accepts multipliers without changing β
+  (bitwise), and both solvers are per-lane bitwise-invariant to batch
+  composition — the two facts the serve cache rests on;
+- at ``stale_threshold=0`` the served cache equals a cold full-fleet
+  solve bitwise (with partial CSI reporting exercising real cache hits);
+- the engine carries ν/λ next to prev-β: ``sched_warm_duals`` on is
+  bitwise the off trajectory, and scan ≡ host with it on;
+- the launch surface: ``repro.launch.serve`` is a deprecation shim over
+  ``decode_demo``, and the service CLI runs.
+"""
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import draw_cn, gauss_markov_step
+from repro.sched import (AdmmDuals, BatchedProblem, ScenarioConfig,
+                         SchedConfig, admm_solve_batched,
+                         admm_solve_batched_jit, bucket, generate_fades,
+                         greedy_solve_batched, init_fades, magnitudes,
+                         pad_to_bucket, step_fades)
+from repro.serve import (ServeConfig, TickStats, fresh_solve, ingest,
+                         init_service, movement, run_ticks, tick)
+from repro.theory.bounds import AnalysisConstants
+
+U = 16
+CONST = AnalysisConstants(rho1=200.0, G=1.0)
+
+
+def _problem(g, k_weights=3000.0) -> BatchedProblem:
+    h = jnp.maximum(jnp.abs(g).astype(jnp.float32), 1e-3)
+    return BatchedProblem.from_arrays(h, k_weights, 10.0, 1e-4, D=50890,
+                                      S=1000, kappa=1000, const=CONST)
+
+
+def _serve_cfg(cells=96, **kw) -> ServeConfig:
+    base = dict(scenario=ScenarioConfig(cells=cells, workers=U, corr=0.99),
+                stale_threshold=0.0, update_frac=0.4)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# --- streaming scenario stepping ----------------------------------------------------
+
+def test_step_fades_matches_trajectory_bitwise():
+    """The tentpole refactor contract: chaining the incremental
+    transition reproduces the whole-trajectory draw bitwise at EVERY
+    round (same jitted executable on both paths)."""
+    cfg = ScenarioConfig(rounds=24, cells=4, workers=8, corr=0.9)
+    key = jax.random.PRNGKey(3)
+    traj = np.asarray(generate_fades(cfg, key))
+    st = init_fades(cfg, key)
+    for t in range(cfg.rounds):
+        assert np.array_equal(np.asarray(st.g), traj[t]), t
+        assert int(st.t) == t
+        if t < cfg.rounds - 1:
+            st = step_fades(cfg, st)
+
+
+def test_stepped_fades_keep_rayleigh_marginal_and_autocorr():
+    """The test_sched.py statistical regression, on the stepped process:
+    stationary CN(0, 1) marginal (E|g|² = 1, E|g| = √π/2) and lag-ℓ
+    autocorrelation ρ^ℓ."""
+    cfg = ScenarioConfig(rounds=400, cells=4, workers=64, corr=0.9)
+    st = init_fades(cfg, jax.random.PRNGKey(1))
+    gs = [st.g]
+    for _ in range(cfg.rounds - 1):
+        st = step_fades(cfg, st)
+        gs.append(st.g)
+    g = jnp.stack(gs)
+    mag = jnp.abs(g)
+    assert abs(float(jnp.mean(mag ** 2)) - 1.0) < 0.05
+    assert abs(float(jnp.mean(mag)) - np.sqrt(np.pi) / 2) < 0.02
+    gf = g.reshape(cfg.rounds, -1)
+    for lag in (1, 3):
+        ac = float(jnp.mean(jnp.real(gf[lag:] * jnp.conj(gf[:-lag]))))
+        assert abs(ac - cfg.rho ** lag) < 0.05, lag
+
+
+def test_magnitudes_clamps_and_scales():
+    cfg = ScenarioConfig(cells=2, workers=8)
+    st = init_fades(cfg, jax.random.PRNGKey(0))
+    h = magnitudes(st)
+    assert h.dtype == jnp.float32 and float(h.min()) >= cfg.h_min
+    gain = 2.0 * jnp.ones((2, 8), jnp.float32)
+    assert np.allclose(np.asarray(magnitudes(st.g, gain)),
+                       np.maximum(np.abs(np.asarray(st.g)) * 2.0, cfg.h_min))
+
+
+# --- shared pow2 compaction ---------------------------------------------------------
+
+def test_bucket_and_pad_properties():
+    assert bucket(1) == 8 and bucket(8) == 8 and bucket(9) == 16
+    assert bucket(1000) == 1024 and bucket(3, min_bucket=2) == 4
+    with pytest.raises(ValueError):
+        bucket(0)
+    idx = np.array([5, 9, 11])
+    pad, valid = pad_to_bucket(idx)
+    assert pad.shape == (8,) and valid.sum() == 3
+    assert np.array_equal(pad[:3], idx) and (pad[3:] == 5).all()
+    with pytest.raises(ValueError):
+        pad_to_bucket(np.array([], np.int64))
+
+
+def test_compacted_solver_matches_jit_bitwise():
+    """The compaction-extraction refactor changes nothing: the
+    host-compacted fleet solver and the scan-safe jit solver agree
+    bitwise per lane — β, b_t, R_t, exit duals AND iteration counts —
+    at a B that exercises several compaction retirements."""
+    g = draw_cn(jax.random.PRNGKey(5), (48, U))
+    prob = _problem(g)
+    b1, t1, r1, i1 = admm_solve_batched(prob, return_duals=True)
+    b2, t2, r2, i2 = admm_solve_batched_jit(prob, return_duals=True)
+    for a, b in ((b1, b2), (t1, t2), (r1, r2), (i1.iters, i2.iters),
+                 *zip(i1.duals, i2.duals)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- dual warm-starting -------------------------------------------------------------
+
+def test_warm_start_preserves_beta_bitwise():
+    """Seeding the multipliers from a correlated earlier solve must not
+    change the converged β (the primal re-initializes; serve-bench gates
+    the same flag at larger B)."""
+    k0, k1 = jax.random.split(jax.random.PRNGKey(2))
+    g0 = draw_cn(k0, (64, U))
+    _, _, _, info = admm_solve_batched(_problem(g0), return_duals=True)
+    assert info.duals.nu.shape == (64, U)
+    assert bool((info.duals.nu >= 0).all())          # eq. 37 prices
+    assert info.iters.dtype == jnp.int32
+    g1 = gauss_markov_step(g0, k1, 0.99)
+    prob1 = _problem(g1)
+    beta_c, bt_c, rt_c = admm_solve_batched(prob1)
+    beta_w, bt_w, rt_w, _ = admm_solve_batched(prob1, duals=info.duals,
+                                               return_duals=True)
+    assert np.array_equal(np.asarray(beta_c), np.asarray(beta_w))
+    assert np.array_equal(np.asarray(bt_c), np.asarray(bt_w))
+    assert np.array_equal(np.asarray(rt_c), np.asarray(rt_w))
+
+
+def test_solvers_batch_composition_invariant():
+    """Per-lane results must not depend on which other lanes share the
+    batch — the fact that makes bucketed incremental solves equal a
+    one-shot fleet solve (the serve cache-parity foundation)."""
+    rng = np.random.default_rng(7)
+    g = draw_cn(jax.random.PRNGKey(7), (64, U))
+    full_a = np.asarray(admm_solve_batched(_problem(g))[0])
+    full_g = np.asarray(greedy_solve_batched(_problem(g))[0])
+    for B in (8, 16):
+        idx = rng.choice(64, B, replace=False)
+        sub = _problem(np.asarray(g)[idx])
+        assert np.array_equal(np.asarray(admm_solve_batched(sub)[0]),
+                              full_a[idx])
+        assert np.array_equal(np.asarray(greedy_solve_batched(sub)[0]),
+                              full_g[idx])
+
+
+# --- the service loop ---------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["admm_batched", "greedy_batched"])
+def test_serve_cache_parity_at_threshold_zero(scheduler):
+    """Acceptance flag (1): at threshold 0 with partial CSI reporting,
+    the served cache — a patchwork of solves from different ticks and
+    bucket sizes — equals a cold full-fleet solve bitwise."""
+    cfg = _serve_cfg(scheduler=scheduler)
+    st = init_service(cfg, jax.random.PRNGKey(0))
+    st, stats, _ = run_ticks(cfg, st, 5)
+    # partial reporting produced real cache hits after the cold tick
+    assert any(s.hit_rate > 0 for s in stats[1:])
+    beta, b_t, rt = fresh_solve(cfg, st)
+    assert np.array_equal(np.asarray(beta), np.asarray(st.beta))
+    assert np.array_equal(np.asarray(b_t), np.asarray(st.b_t))
+    assert np.array_equal(np.asarray(rt), np.asarray(st.rt))
+
+
+def test_serve_hit_rate_accounting():
+    """Tick 0 is all-dirty (cold cache); afterwards only reporting cells
+    can be dirty, and the hit rate is 1 − dirty/cells."""
+    cfg = _serve_cfg(cells=64)
+    st = init_service(cfg, jax.random.PRNGKey(4))
+    st, stats, _ = run_ticks(cfg, st, 4)
+    assert stats[0].n_dirty == 64 and stats[0].hit_rate == 0.0
+    for s in stats[1:]:
+        assert s.n_dirty <= s.n_reported
+        assert s.hit_rate == 1.0 - s.n_dirty / 64
+        assert s.n_solved >= s.n_dirty       # pow2 pad lanes included
+        assert isinstance(s, TickStats)
+
+
+def test_serve_threshold_freezes_cache():
+    """An effectively infinite staleness threshold never re-solves after
+    the cold tick — the cache is served unchanged."""
+    cfg = _serve_cfg(cells=32, stale_threshold=1e9, update_frac=1.0)
+    st = init_service(cfg, jax.random.PRNGKey(0))
+    st, stats0, _ = run_ticks(cfg, st, 1)
+    beta0 = np.asarray(st.beta)
+    st, stats, _ = run_ticks(cfg, st, 3)
+    assert all(s.n_dirty == 0 and s.n_solved == 0 for s in stats)
+    assert np.array_equal(np.asarray(st.beta), beta0)
+
+
+def test_serve_ingest_marks_dirty():
+    """An out-of-band CSI push re-solves exactly the pushed cells on the
+    next tick (update_frac=0: no other reports compete)."""
+    cfg = _serve_cfg(cells=32, update_frac=0.0)
+    st = init_service(cfg, jax.random.PRNGKey(1))
+    st, _, _ = run_ticks(cfg, st, 2)                # cold solve, then idle
+    h_new = np.asarray(st.h_seen)[[3, 7]] * 1.5
+    st = ingest(st, [3, 7], h_new)
+    assert set(np.flatnonzero(movement(cfg, st) > 0)) == {3, 7}
+    st, stats = tick(cfg, st)
+    assert stats.n_dirty == 2 and stats.n_reported == 0
+    assert np.array_equal(np.asarray(st.h_solved)[[3, 7]], h_new)
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(scheduler="enum")
+    with pytest.raises(ValueError):
+        ServeConfig(update_frac=1.5)
+    with pytest.raises(ValueError):
+        ServeConfig(stale_threshold=-0.1)
+    assert ServeConfig().warm
+    assert not ServeConfig(scheduler="greedy_batched").warm
+
+
+# --- engine carries ν/λ next to prev-β ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def fl_task():
+    """Tiny linear-regression FL task (4 workers) for the engine runs."""
+    rng = np.random.default_rng(0)
+    workers, D, n = 4, 40, 16
+    x = rng.normal(size=(workers, n, D)).astype(np.float32)
+    w_true = rng.normal(size=(D,)).astype(np.float32)
+    y = (x @ w_true
+         + 0.1 * rng.normal(size=(workers, n)).astype(np.float32))
+    wd = {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.float32))}
+    params0 = {"w": jnp.zeros((D,), jnp.float32)}
+
+    def loss_fn(p, d):
+        return jnp.mean((d["x"] @ p["w"] - d["y"]) ** 2)
+
+    return wd, params0, loss_fn, np.full(workers, float(n))
+
+
+def _fl_cfg(**kw):
+    from repro.core.obcsaa import OBCSAAConfig
+    from repro.engine import FLConfig
+    base = dict(aggregator="obcsaa", scheduler="admm_batched", rounds=6,
+                seed=0, channel_rho=0.9, const=CONST,
+                obcsaa=OBCSAAConfig(chunk=40, measure=20, topk=4))
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _run_fl(task, cfg):
+    from repro.fl import FederatedTrainer
+    wd, params0, loss_fn, kw = task
+    tr = FederatedTrainer(cfg, loss_fn, params0, wd, kw)
+    tr.run(cfg.rounds)
+    return tr
+
+
+def test_engine_warm_duals_bitwise_neutral(fl_task):
+    """Acceptance flag (2) at the engine layer: carrying ν/λ in the scan
+    state and warm-starting every round's P2 leaves the training
+    trajectory bitwise-unchanged (β is bitwise-stable under dual warm
+    starts), and the carry actually holds the duals."""
+    off = _run_fl(fl_task, _fl_cfg(sched_warm_duals=False))
+    on = _run_fl(fl_task, _fl_cfg(sched_warm_duals=True))
+    assert off._state.sched_duals is None
+    assert isinstance(on._state.sched_duals, AdmmDuals)
+    assert on._state.sched_duals.nu.shape == (4,)
+    assert np.array_equal(np.asarray(off.params["w"]),
+                          np.asarray(on.params["w"]))
+
+
+def test_engine_warm_duals_scan_equals_host(fl_task):
+    """scan ≡ host parity survives the dual carry: both paths thread the
+    same (β, b_t, duals) triple through the same round body."""
+    scan = _run_fl(fl_task, _fl_cfg(sched_warm_duals=True, mode="scan"))
+    host = _run_fl(fl_task, _fl_cfg(sched_warm_duals=True, mode="host"))
+    assert scan._mode == "scan" and host._mode == "host"
+    assert np.array_equal(np.asarray(scan.params["w"]),
+                          np.asarray(host.params["w"]))
+    for a, b in zip(scan._state.sched_duals, host._state.sched_duals):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- launch surface -----------------------------------------------------------------
+
+def test_launch_serve_shim_deprecates():
+    sys.modules.pop("repro.launch.serve", None)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import repro.launch.serve as shim
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    from repro.launch.decode_demo import main as demo_main
+    assert shim.main is demo_main
+
+
+def test_serve_cli_smoke(capsys):
+    from repro.serve.cli import main
+    rc = main(["--cells", "32", "--workers", "8", "--ticks", "2",
+               "--threshold", "0.0"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "SLO:" in out and "hit_rate" in out
