@@ -223,10 +223,40 @@ class TrainConfig:
     p_max: float = 10.0             # P^Max (mW)
     # §Perf knobs (beyond-paper; False/f32 = paper-faithful baseline)
     cs_shard_aligned: bool = False  # chunk along the model-sharded dim
+    cs_packed: bool = False         # 32-signs-per-uint32 wire format (§13)
     wire_dtype: str = "float32"     # MAC symbol dtype (bf16 halves psum B/W)
     remat: bool = True
+    # Remat granularity for the scanned layer stack (DESIGN.md §16):
+    # None -> derive from the bool `remat` ("full" / "off"); otherwise one
+    # of "off" | "full" | "dots" | "dots_no_batch".
+    remat_policy: Optional[str] = None
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        # Eager geometry validation: a packed uplink rides 32 signs per
+        # uint32 word, so S_c must pack evenly. Failing here (at config
+        # construction) names the field; failing later surfaces as an
+        # opaque reshape error deep in the Pallas kernels.
+        if self.cs_packed and self.cs_measure % 32 != 0:
+            raise ValueError(
+                f"TrainConfig.cs_measure={self.cs_measure} does not satisfy "
+                f"the packed-wire geometry: cs_packed=True needs "
+                f"cs_measure % 32 == 0 (32 signs per uint32 word, "
+                f"DESIGN.md §13). Pick a multiple of 32 or set "
+                f"cs_packed=False.")
+        valid_remat = (None, "off", "full", "dots", "dots_no_batch")
+        if self.remat_policy not in valid_remat:
+            raise ValueError(
+                f"TrainConfig.remat_policy={self.remat_policy!r} not in "
+                f"{valid_remat}")
+
+    @property
+    def remat_mode(self):
+        """Effective remat knob for ``models.transformer.remat_wrap``."""
+        if self.remat_policy is not None:
+            return self.remat_policy
+        return "full" if self.remat else "off"
 
 
 def scaled(cfg: ModelConfig, **overrides) -> ModelConfig:

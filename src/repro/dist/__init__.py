@@ -20,6 +20,7 @@ _compat.install()
 
 from repro.dist import collectives  # noqa: E402
 from repro.dist.sharding import (best_spec, constrain,  # noqa: E402
-                                 infer_param_sharding)
+                                 infer_param_sharding, param_shard_dims)
 
-__all__ = ["best_spec", "collectives", "constrain", "infer_param_sharding"]
+__all__ = ["best_spec", "collectives", "constrain", "infer_param_sharding",
+           "param_shard_dims"]

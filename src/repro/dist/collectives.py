@@ -95,6 +95,44 @@ def all_gather(x, axes, *, axis: int = 0, tiled: bool = False):
     return jax.lax.all_gather(x, _one_or_tuple(axes), axis=axis, tiled=tiled)
 
 
+def replicated_gather(axes, group_size: int, *, dim: int = 0):
+    """All-gather whose TRANSPOSE is this device's slice — the collective
+    behind the zoo-train layer resolver (DESIGN.md §16).
+
+    Forward: tiled ``all_gather`` of a weight shard along ``dim`` over
+    ``axes`` (the model axis), producing the full weight for redundant
+    compute. Backward: because every device in the gather group runs the
+    SAME forward on the SAME batch, their cotangents are bit-identical
+    replicas — so the exact adjoint is a LOCAL static slice, not the
+    AD-default ``psum_scatter`` (which would sum ``axis_size`` identical
+    copies and scale gradients by the group size, besides introducing a
+    cross-device float reduction that breaks bitwise mesh-invariance).
+
+    Returns a unary ``gather(x)`` for static ``(axes, group_size, dim)``;
+    ``group_size`` is the static device count over ``axes`` (the slice
+    size in the adjoint must be static). No axes → identity."""
+    axes = norm_axes(axes)
+    if not axes:
+        return lambda x: x
+
+    @jax.custom_vjp
+    def gather(x):
+        return jax.lax.all_gather(x, _one_or_tuple(axes), axis=dim,
+                                  tiled=True)
+
+    def fwd(x):
+        return gather(x), None
+
+    def bwd(_, g):
+        n_local = g.shape[dim] // group_size
+        idx = axis_index(axes)
+        return (jax.lax.dynamic_slice_in_dim(g, idx * n_local, n_local,
+                                             dim),)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
 def axis_index(axes):
     """This worker's linear index over the (possibly compound) worker axes."""
     axes = norm_axes(axes)

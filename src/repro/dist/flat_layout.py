@@ -1,0 +1,170 @@
+"""Model-major sharded-flat parameter layout for zoo-scale training
+(DESIGN.md §16).
+
+The zoo round (engine/zoo.py) stores parameters as a chunked
+``(n_chunks, D_c)`` f32 array whose chunk axis is partitioned model-major
+over ``("model",) + worker_axes``. For REAL gradients to flow into the
+compressor with no host round-trip and no full-D gather, the flat order
+of that array cannot be arbitrary: it must be chosen so that the
+gradients each device computes are EXACTLY the chunk rows it owns.
+
+:class:`FlatShardLayout` pins that order down. With ``mp`` model shards,
+the canonical flat vector is the concatenation of ``mp`` *sections*; the
+m-th section is, leaf by leaf (pytree flatten order), the raveled m-th
+slice of each leaf along its model-sharded dim (``dist.sharding
+.param_shard_dims``), zero-padded at the section end to a whole number of
+chunks (``n_half``, rounded up so the worker count divides it). The chunk
+rows of section m are the rows device column m owns — so
+
+* a worker column all-gathers its section over the worker axes and turns
+  it into per-leaf weight SHARDS by local reshapes (``section_to_tree``),
+* the backward pass produces cotangents with those same shard shapes, and
+  flattening them back (``tree_to_section``) IS the (n_half, D_c) block
+  of per-worker gradients the compressor consumes — layout conversion is
+  zero communication by construction.
+
+Every leaf must split evenly over ``mp`` along some dim (build raises
+naming the offending leaf otherwise); that is what makes the section
+structure identical for every m, which in turn is what lets one traced
+program serve all model shards.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import STACKED_KEYS, param_shard_dims
+
+
+class _LeafSlot(NamedTuple):
+    name: str            # keystr path, for error messages
+    shape: Tuple[int, ...]
+    dtype: Any
+    dim: int             # model-sharded dim (-1: replicated, mp == 1 only)
+    offset: int          # element offset of the m-slice within its section
+    m_size: int          # elements of one m-slice (= prod(shape) // mp)
+
+
+class FlatShardLayout:
+    """See module docstring. Build via :meth:`build`."""
+
+    def __init__(self, treedef, slots: List[_LeafSlot], *, mp: int,
+                 chunk: int, n_half: int):
+        self.treedef = treedef
+        self.slots = slots
+        self.mp = mp
+        self.chunk = chunk
+        self.n_half = n_half                       # chunks per section
+        self.n_chunks = mp * n_half
+        self.sec_elems = sum(s.m_size for s in slots)
+        self.D = self.sec_elems * mp               # true parameter count
+        self.D_pad = self.n_chunks * chunk
+
+    @classmethod
+    def build(cls, shapes_tree, mesh, *, chunk: int, gran: int = 1,
+              model_axis: str = "model", stacked_keys=STACKED_KEYS):
+        """Layout for a params pytree of arrays / ShapeDtypeStructs.
+
+        ``gran``: round ``n_half`` up to a multiple of this (the worker
+        count, so every device owns a whole number of chunk rows)."""
+        mp = int(dict(mesh.shape).get(model_axis, 1))
+        dims_tree = param_shard_dims(shapes_tree, mesh,
+                                     model_axis=model_axis,
+                                     stacked_keys=stacked_keys)
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(shapes_tree)
+        dims = jax.tree_util.tree_leaves(dims_tree)
+        slots, off = [], 0
+        for (path, leaf), dim in zip(leaves, dims):
+            name = jax.tree_util.keystr(path)
+            shape = tuple(leaf.shape)
+            size = math.prod(shape) if shape else 1
+            if mp > 1:
+                if dim < 0 or shape[dim] % mp != 0:
+                    raise ValueError(
+                        f"zoo-train layout: leaf {name} with shape {shape} "
+                        f"has no dim divisible by the model-axis size "
+                        f"{mp}; every parameter leaf must split evenly "
+                        f"over '{model_axis}' (DESIGN.md §16). Resize the "
+                        f"offending dimension or shrink the model axis.")
+                if size % mp != 0:
+                    raise ValueError(
+                        f"zoo-train layout: leaf {name} size {size} not "
+                        f"divisible by model-axis size {mp}")
+            m_size = size // mp
+            slots.append(_LeafSlot(name, shape, leaf.dtype, dim, off, m_size))
+            off += m_size
+        n_half = -(-off // chunk)
+        n_half = -(-n_half // max(gran, 1)) * max(gran, 1)
+        return cls(treedef, slots, mp=mp, chunk=chunk, n_half=n_half)
+
+    # -- shapes ------------------------------------------------------------
+
+    def shard_shape(self, slot: _LeafSlot) -> Tuple[int, ...]:
+        """Shape of one m-slice of ``slot`` (leaf shape with the sharded
+        dim divided by mp)."""
+        if self.mp == 1 or slot.dim < 0:
+            return slot.shape
+        s = list(slot.shape)
+        s[slot.dim] //= self.mp
+        return tuple(s)
+
+    # -- device-local conversions (identical for every m) ------------------
+
+    def section_to_tree(self, sect):
+        """(n_half, D_c) or flat m-section -> pytree of per-leaf m-slices
+        (pure local reshapes; same structure whatever m — that is the
+        layout invariant)."""
+        flat = sect.reshape(-1)
+        leaves = [
+            jax.lax.dynamic_slice_in_dim(flat, s.offset, s.m_size, 0)
+            .reshape(self.shard_shape(s)) for s in self.slots]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def tree_to_section(self, slices_tree):
+        """pytree of per-leaf m-slices -> (n_half, D_c) flat m-section,
+        zero-padded; dtype follows the input leaves."""
+        leaves = jax.tree_util.tree_leaves(slices_tree)
+        flat = jnp.concatenate([x.reshape(-1) for x in leaves])
+        pad = self.n_half * self.chunk - flat.shape[0]
+        return jnp.pad(flat, (0, pad)).reshape(self.n_half, self.chunk)
+
+    # -- full-tree conversions (init / oracle / checkpoint interop) --------
+
+    def _slice_m(self, leaf, slot: _LeafSlot, m: int):
+        if self.mp == 1 or slot.dim < 0:
+            return leaf
+        k = slot.shape[slot.dim] // self.mp
+        return jax.lax.slice_in_dim(leaf, m * k, (m + 1) * k, axis=slot.dim)
+
+    def tree_to_master(self, params, dtype=jnp.float32):
+        """Full params pytree -> the canonical (n_chunks, D_c) array."""
+        leaves = jax.tree_util.tree_leaves(params)
+        sections = []
+        for m in range(self.mp):
+            flat = jnp.concatenate(
+                [self._slice_m(leaf, s, m).reshape(-1).astype(dtype)
+                 for leaf, s in zip(leaves, self.slots)])
+            pad = self.n_half * self.chunk - flat.shape[0]
+            sections.append(jnp.pad(flat, (0, pad)))
+        return jnp.concatenate(sections).reshape(self.n_chunks, self.chunk)
+
+    def master_to_tree(self, master, dtype=None):
+        """(n_chunks, D_c) -> full params pytree (inverse of
+        ``tree_to_master``; pad elements are dropped). ``dtype`` casts the
+        leaves (None keeps the master's dtype)."""
+        flat = master.reshape(self.mp, self.n_half * self.chunk)
+        if dtype is not None:
+            flat = flat.astype(dtype)
+        per_m = [jax.tree_util.tree_leaves(self.section_to_tree(flat[m]))
+                 for m in range(self.mp)]
+        leaves = []
+        for i, s in enumerate(self.slots):
+            if self.mp == 1 or s.dim < 0:
+                leaves.append(per_m[0][i])
+            else:
+                leaves.append(jnp.concatenate(
+                    [per_m[m][i] for m in range(self.mp)], axis=s.dim))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)

@@ -13,6 +13,11 @@ Three entry points, consumed across core, models, and launch:
   inference for params / optimizer state: the largest model-divisible dim
   of each leaf is sharded over ``model``; worker axes (pod, data) stay
   replicated because every FL worker holds the full model (DESIGN.md §3).
+  Stacked-layer pytrees (leaves whose path goes through a
+  ``stacked_keys`` entry, e.g. the transformer's ``layers`` collection
+  scanned by ``lax.scan``) never shard their leading dim: that axis is
+  the scan axis and must stay whole so ``lax.scan`` can slice one layer
+  per step (DESIGN.md §16).
 """
 from __future__ import annotations
 
@@ -22,6 +27,10 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist import compat
+
+# Pytree keys whose subtrees hold layer-stacked leaves: dim 0 is the
+# lax.scan axis, not a shardable weight dim.
+STACKED_KEYS = ("layers", "enc_layers")
 
 
 def _ambient():
@@ -148,30 +157,76 @@ def infer_batch_sharding(tree, mesh, *, dim: int = 0):
     return jax.tree_util.tree_map(spec_of, tree)
 
 
-def infer_param_sharding(tree, mesh, *, model_axis: str = "model"):
+def _path_is_stacked(path, stacked_keys) -> bool:
+    for entry in path:
+        key = getattr(entry, "key", getattr(entry, "name", None))
+        if key in stacked_keys:
+            return True
+    return False
+
+
+def _best_model_dim(shape, msize, *, skip_leading: bool):
+    """Index of the largest ``msize``-divisible dim, or None.
+
+    ``skip_leading`` excludes dim 0 (a stacked leaf's scan axis). Ties go
+    to the trailing dim — the contraction/output dim of weight matrices."""
+    if msize <= 1 or not shape:
+        return None
+    best = None
+    for i, d in enumerate(shape):
+        if skip_leading and i == 0:
+            continue
+        if d > 1 and d % msize == 0 and (best is None or d >= shape[best]):
+            best = i
+    return best
+
+
+def param_shard_dims(tree, mesh, *, model_axis: str = "model",
+                     stacked_keys: Sequence[str] = STACKED_KEYS):
+    """Per-leaf shard-dim pytree mirroring ``infer_param_sharding``.
+
+    Each leaf maps to the int dim index sharded over ``model_axis``, or
+    -1 when the leaf replicates (-1 rather than None so the result stays
+    leaf-for-leaf congruent with ``tree``). Consumed by the zoo-train
+    layout and layer resolvers, which need the raw dim to slice/gather
+    along rather than a NamedSharding."""
+    mesh = compat._unwrap(mesh)
+    msize = _axis_sizes(mesh).get(model_axis, 1)
+
+    def dim_of(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        best = _best_model_dim(
+            shape, msize, skip_leading=_path_is_stacked(path, stacked_keys))
+        return -1 if best is None else best
+
+    return jax.tree_util.tree_map_with_path(dim_of, tree)
+
+
+def infer_param_sharding(tree, mesh, *, model_axis: str = "model",
+                         stacked_keys: Sequence[str] = STACKED_KEYS):
     """NamedSharding pytree for params / optimizer state.
 
     Rule: shard each leaf's largest ``model``-divisible dim over the model
     axis (ties -> the trailing dim, the contraction/output dim of weight
     matrices); everything else — scalars, odd-shaped leaves, meshes with
     no model parallelism — replicates. Worker axes are never used: each
-    data shard is an FL worker holding the full (model-sharded) network."""
+    data shard is an FL worker holding the full (model-sharded) network.
+
+    Leaves under a ``stacked_keys`` path (layer stacks stepped by
+    ``lax.scan``) keep dim 0 whole — the scan axis is sliced one layer per
+    step and sharding it would split layers across devices instead of
+    splitting weights within a layer."""
     mesh = compat._unwrap(mesh)
     msize = _axis_sizes(mesh).get(model_axis, 1)
 
-    def spec_of(leaf):
+    def spec_of(path, leaf):
         shape = tuple(getattr(leaf, "shape", ()))
-        if msize <= 1 or not shape:
-            return P()
-        best = None
-        for i, d in enumerate(shape):
-            if d > 1 and d % msize == 0 and (best is None or d >= shape[best]):
-                best = i
+        best = _best_model_dim(
+            shape, msize, skip_leading=_path_is_stacked(path, stacked_keys))
         if best is None:
-            return P()
+            return NamedSharding(mesh, P())
         parts = [None] * len(shape)
         parts[best] = model_axis
-        return P(*parts)
+        return NamedSharding(mesh, P(*parts))
 
-    return jax.tree_util.tree_map(
-        lambda leaf: NamedSharding(mesh, spec_of(leaf)), tree)
+    return jax.tree_util.tree_map_with_path(spec_of, tree)

@@ -115,10 +115,12 @@ class ZooRound:
                  scheduler: str = "all",
                  const: Optional[AnalysisConstants] = None,
                  sched_cfg=None, grad_scale: float = 0.05,
-                 block_chunks: int = 64):
+                 block_chunks: int = 64, n_chunks: Optional[int] = None):
         if D >= 2 ** 32:
-            raise ValueError("zoo surrogate hashes uint32 element indices; "
-                             f"D={D} needs a 64-bit index path")
+            raise ValueError(
+                f"ZooRound(D={D}): the zoo surrogate hashes uint32 element "
+                "indices, so D must stay below 2**32 (a 64-bit index path "
+                "is the escape hatch)")
         self.ob, self.D, self.mesh = ob, int(D), mesh
         self.waxes = worker_axes(mesh)
         self.U = num_workers(mesh)
@@ -127,15 +129,28 @@ class ZooRound:
         self.scheduler = scheduler
         self.const = const or AnalysisConstants()
         self.sched_cfg = sched_cfg
-        # chunk count padded so every device owns an equal block
-        n_raw = -(-self.D // ob.chunk)
+        # chunk count padded so every device owns an equal block; callers
+        # with their own flat layout (zoo-train) pass n_chunks explicitly
         gran = self.n_model * self.U
-        self.n_chunks = -(-n_raw // gran) * gran
+        if n_chunks is None:
+            n_raw = -(-self.D // ob.chunk)
+            n_chunks = -(-n_raw // gran) * gran
+        elif n_chunks % gran or n_chunks * ob.chunk < self.D:
+            raise ValueError(
+                f"ZooRound(n_chunks={n_chunks}): with OBCSAAConfig.chunk="
+                f"{ob.chunk} the chunk count must cover D={self.D} and "
+                f"divide evenly over the mesh granularity {gran} "
+                f"(= model {self.n_model} x workers {self.U}); every "
+                "device owns a whole chunk block (DESIGN.md §14)")
+        self.n_chunks = n_chunks
         self.D_pad = self.n_chunks * ob.chunk
         self.n_half = self.n_chunks // self.n_model
         self.n_local = self.n_half // self.U
         self.block = next(b for b in range(min(block_chunks, self.n_half),
                                            0, -1) if self.n_half % b == 0)
+        self.block_dec = next(b for b in range(min(block_chunks,
+                                                   self.n_local),
+                                               0, -1) if self.n_local % b == 0)
         self.spec = param_spec(mesh)
         self.grads_spec = grads_spec(mesh)
         _, s_eff, kappa_eff = budget_geometry(ob, self.D_pad)
@@ -229,12 +244,40 @@ class ZooRound:
         if ob.magnitude_tracking:
             mbar_q = coll.shard_slice(mag_sum, self.waxes) \
                 / jnp.maximum(ksum, 1e-12)
-        ghat = reconstruct_chunks(ob, yq, mbar_q, phi).reshape(
-            self.n_local, ob.chunk)
+        ghat = self._decode_blocks(yq, mbar_q, phi)
         axes_all = self.waxes + (("model",) if "model"
                                  in self.mesh.axis_names else ())
         gn2 = coll.psum(jnp.sum(ghat * ghat), axes_all)
         return pl - lr * ghat, gn2
+
+    def _decode_blocks(self, yq, mbar_q, phi):
+        """``reconstruct_chunks`` behind a ``lax.map`` block boundary of
+        ``block_dec`` rows — the SAME loop-body shape in the sharded round
+        and in the single-device reference.
+
+        XLA compiles the IHT decode differently for different leading row
+        counts in some contexts (observed inside shard_map at n_local 25
+        and 32 on CPU), which drifts final ulps between the mesh's
+        (n_local, S_c) decode and the oracle's (n_chunks, S_c) decode. A
+        loop body of identical shape on both sides pins one compiled
+        decode program, keeping the round bitwise mesh-invariant at every
+        chunk geometry — and bounds decode workspace to ``block_dec``
+        chunks, which is what lets the ≥1B rounds keep activation-sized
+        decode buffers off the device (DESIGN.md §14)."""
+        ob, b = self.ob, self.block_dec
+        nb = yq.shape[0] // b
+        if mbar_q is None:
+            out = jax.lax.map(
+                lambda yb: reconstruct_chunks(ob, yb, None, phi)
+                .reshape(b, ob.chunk),
+                yq.reshape((nb, b) + yq.shape[1:]))
+        else:
+            out = jax.lax.map(
+                lambda args: reconstruct_chunks(ob, args[0], args[1], phi)
+                .reshape(b, ob.chunk),
+                (yq.reshape((nb, b) + yq.shape[1:]),
+                 mbar_q.reshape(nb, b)))
+        return out.reshape(nb * b, ob.chunk)
 
     def _build(self):
         ob, waxes = self.ob, self.waxes
@@ -357,6 +400,15 @@ class ZooRound:
             return compress_chunks(ob, g, None)
 
         signs, mags = jax.lax.map(one, jnp.arange(U, dtype=jnp.int32))
+        return self._reference_tail(chunked, signs, mags, beta, b_t, nkey,
+                                    noise_var, lr)
+
+    def _reference_tail(self, chunked, signs, mags, beta, b_t, nkey,
+                        noise_var, lr):
+        """Single-device MAC + decode + update given per-worker
+        (U, n_chunks, ...) compressed uploads — shared by the surrogate,
+        array-fed, and zoo-train (engine/zoo_train.py) oracles."""
+        ob = self.ob
         if ob.packed:
             from repro.kernels.sign import unpack_bits
             contrib = (2 * unpack_bits(signs, jnp.int32) - 1) \
@@ -373,8 +425,9 @@ class ZooRound:
         if ob.magnitude_tracking:
             mbar = jnp.einsum("u,uc->c", beta.astype(mags.dtype), mags) \
                 / jnp.maximum(ksum, 1e-12)
-        ghat = reconstruct_chunks(ob, y, mbar, None).reshape(
-            self.n_chunks, ob.chunk)
+        # same block_dec loop-body shape as the mesh decode (bitwise
+        # parity at every geometry; see _decode_blocks)
+        ghat = self._decode_blocks(y, mbar, None)
         gn2 = jnp.sum(ghat * ghat)
         return (chunked - jnp.float32(lr) * ghat,
                 self._stats(beta, b_t, gn2, noise_var))

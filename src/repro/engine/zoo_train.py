@@ -1,0 +1,425 @@
+"""repro.engine.zoo_train — REAL sharded backward passes at zoo scale
+(DESIGN.md §16).
+
+engine/zoo.py proves the ≥1B-parameter compress→MAC→decode→update round
+but drives it with surrogate gradients; this module closes the gap: the
+genuine eq. 3 local gradients of a scanned-stacked-layer model, computed
+parameter-sharded on the same workers×model mesh, flow into the SAME
+round tail with nothing dense at full D ever replicated and zero layout
+communication between the backward pass and the compressor.
+
+The scheme (one ``jax.shard_map`` program over the whole mesh):
+
+* The master lives as the zoo round's chunked ``(n_chunks, D_c)`` f32
+  array, but its flat order is the :class:`~repro.dist.flat_layout
+  .FlatShardLayout` model-major sharded-flat order: section m holds the
+  m-th model-axis slice of every leaf. Device (worker d, model m) owns
+  chunk rows ``m·n_half + d·n_local`` — exactly the slice of section m
+  its own backward pass produces.
+* Per round, each device casts its master block to the compute dtype and
+  all-gathers over the WORKER axes only — materializing its model
+  section, never full D — then views it as per-leaf weight shards by
+  local reshapes (``section_to_tree``).
+* The forward/backward is *redundant over the model axis*: every device
+  in a worker column runs the worker's full loss on the worker's batch,
+  resolving weight shards to full per-layer weights one scan step at a
+  time through ``lm_forward``'s ``layer_resolver`` hook (non-stacked
+  leaves — embedding, norms, shared blocks — are resolved once up
+  front). The resolver's collective is ``collectives.replicated_gather``,
+  whose adjoint is a LOCAL slice: replicated compute means replicated
+  cotangents, so no cross-device float reduction exists anywhere in the
+  backward and the round stays bitwise mesh-invariant. Remat policy
+  (``TrainConfig.remat_policy``) bounds activation memory: with "full",
+  per-layer gathered weights are recomputed, not saved.
+* The resulting cotangents have exactly the shard shapes of
+  ``section_to_tree``; flattening them back (``tree_to_section``) IS this
+  device's (n_half, D_c) gradient block — grads enter ``compress_chunks``
+  already in the layout the compressor consumes, with no host round-trip
+  and no gather to full D. The MAC/decode/update tail is inherited
+  unchanged from :class:`~repro.engine.zoo.ZooRound`.
+
+:meth:`ZooTrainRound.reference_round_train` is the jitted single-device
+oracle (full params from ``master_to_tree``, identical op chain with the
+collectives replaced by their local stand-ins) — the bitwise parity
+target of tests/test_zoo_train.py. :meth:`ZooTrainRound.run_sweep` lifts
+the multi-arm grid on top: one jitted ``scan`` over rounds of ``lax.map``
+over arms, so arms × zoo-scale params compose into one program.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.obcsaa import OBCSAAConfig, compress_chunks
+from repro.dist import collectives as coll
+from repro.dist.flat_layout import FlatShardLayout
+from repro.dist.sharding import STACKED_KEYS, param_shard_dims
+from repro.engine.zoo import ZooRound, ZooStats
+from repro.launch.mesh import num_workers
+
+
+class ZooTrainStats(NamedTuple):
+    """ZooStats plus the mean local training loss (host-visible)."""
+    loss: jnp.ndarray
+    n_scheduled: jnp.ndarray
+    b_t: jnp.ndarray
+    ghat_norm: jnp.ndarray
+    budget: object
+
+
+def _with_loss(st: ZooStats, loss) -> ZooTrainStats:
+    return ZooTrainStats(loss=loss, n_scheduled=st.n_scheduled, b_t=st.b_t,
+                         ghat_norm=st.ghat_norm, budget=st.budget)
+
+
+class ZooTrainRound(ZooRound):
+    """Zoo round whose gradients come from a real sharded backward pass.
+
+    ``model``: a ``repro.models.registry.Model`` whose params pytree is a
+    dict (stacked layer collections under ``dist.sharding.STACKED_KEYS``).
+    Inherits the surrogate/array-fed programs, layout helpers, and the
+    MAC/decode/update tail from :class:`ZooRound`; adds
+    ``round_train`` / ``grads_in_layout`` / ``reference_round_train`` /
+    ``run_sweep``. Programs are built lazily per batch structure."""
+
+    def __init__(self, model, mesh, ob: OBCSAAConfig, *,
+                 scheduler: str = "all", const=None, sched_cfg=None,
+                 block_chunks: int = 64, compute_dtype=jnp.bfloat16,
+                 remat="full"):
+        self.model = model
+        self.compute_dtype = compute_dtype
+        self.remat = remat
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        if not isinstance(shapes, dict):
+            raise TypeError("zoo-train expects a dict params pytree, got "
+                            f"{type(shapes)}")
+        # gran aligns n_half to workers x block_chunks: every device owns a
+        # whole number of FULL decode blocks, so block_dec == block_chunks
+        # at any D instead of degenerating to a tiny divisor of an
+        # unlucky n_local (the ≥1B decode would otherwise crawl through
+        # thousands of 1-row lax.map steps)
+        self.layout = FlatShardLayout.build(
+            shapes, mesh, chunk=ob.chunk,
+            gran=num_workers(mesh) * block_chunks)
+        self._dims_tree = param_shard_dims(shapes, mesh)
+        super().__init__(ob, self.layout.D, mesh, scheduler=scheduler,
+                         const=const, sched_cfg=sched_cfg,
+                         block_chunks=block_chunks,
+                         n_chunks=self.layout.n_chunks)
+        # per-layer gather dims for each stacked collection, keyed by the
+        # per-layer treedef the scan body sees (stacked dim 0 sliced off,
+        # so every stacked leaf's gather dim shifts down by one)
+        self._resolver_dims = {}
+        for key in STACKED_KEYS:
+            if key in shapes:
+                dleaves, dtd = jax.tree_util.tree_flatten(
+                    self._dims_tree[key])
+                self._resolver_dims[dtd] = [max(d - 1, -1) for d in dleaves]
+        self._programs = {}
+
+    # -- weight resolution --------------------------------------------------
+
+    def _gather_leaf(self, x, dim: int):
+        if self.n_model == 1 or dim < 0:
+            return x
+        return coll.replicated_gather(("model",), self.n_model, dim=dim)(x)
+
+    def _layer_resolver(self, lp):
+        """Shard -> full weights for one scanned layer (inside the scan
+        body and the remat boundary)."""
+        leaves, td = jax.tree_util.tree_flatten(lp)
+        dims = self._resolver_dims.get(td)
+        if dims is None:
+            raise KeyError(
+                f"zoo-train layer resolver saw an unknown per-layer "
+                f"structure {td}; stacked collections must be registered "
+                f"under dist.sharding.STACKED_KEYS {STACKED_KEYS}")
+        return jax.tree_util.tree_unflatten(
+            td, [self._gather_leaf(x, d) for x, d in zip(leaves, dims)])
+
+    def _materialize(self, p_shards):
+        """Resolve NON-stacked leaves to full weights up front; stacked
+        collections stay sharded for the per-layer resolver."""
+        out = {}
+        for key, sub in p_shards.items():
+            if key in STACKED_KEYS:
+                out[key] = sub
+            else:
+                out[key] = jax.tree_util.tree_map(
+                    self._gather_leaf, sub, self._dims_tree[key])
+        return out
+
+    def _local_loss_and_grads(self, pl, batch_u):
+        """This device's loss + (n_half, D_c) gradient block, from its
+        local master block ``pl`` — the heart of the tentpole."""
+        sect = coll.all_gather(pl.astype(self.compute_dtype), self.waxes,
+                               tiled=True)
+        p_shards = self.layout.section_to_tree(sect)
+
+        def loss_of(p_shards):
+            loss, _ = self.model.loss_fn(
+                self._materialize(p_shards), batch_u, remat=self.remat,
+                layer_resolver=self._layer_resolver
+                if self._resolver_dims else None)
+            return loss
+
+        loss, g_shards = jax.value_and_grad(loss_of)(p_shards)
+        return loss, self.layout.tree_to_section(g_shards)
+
+    def _compress_blocks(self, g_sect):
+        """compress_chunks over (n_half, D_c) in block_chunks blocks (cast
+        to f32 per block — the section itself stays in compute dtype)."""
+        ob, n_half = self.ob, self.n_half
+        nb = n_half // self.block
+        signs, mags = jax.lax.map(
+            lambda gb: compress_chunks(ob, gb.astype(jnp.float32), None),
+            g_sect.reshape(nb, self.block, ob.chunk))
+        return signs.reshape((n_half,) + signs.shape[2:]), \
+            mags.reshape(n_half)
+
+    # -- program construction ----------------------------------------------
+
+    def _batch_key(self, batch):
+        return tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                            for k, v in batch.items()))
+
+    def batch_spec(self, batch):
+        """Per-leaf PartitionSpec tree: leading (U) worker dim over the
+        worker axes, replicated over model."""
+        w = self.waxes if len(self.waxes) > 1 else self.waxes[0]
+        return {k: P(w, *(None,) * (v.ndim - 1)) for k, v in batch.items()}
+
+    def shard_batch(self, batch):
+        """device_put a (U, ...)-stacked batch dict onto the mesh."""
+        spec = self.batch_spec(batch)
+        return {k: jax.device_put(
+            jnp.asarray(v), NamedSharding(self.mesh, spec[k]))
+            for k, v in batch.items()}
+
+    def _fns(self, batch):
+        key = self._batch_key(batch)
+        if key in self._programs:
+            return self._programs[key]
+        waxes, n_half = self.waxes, self.n_half
+        rep, sc = P(None), P()
+        bspec = self.batch_spec(batch)
+
+        def model_idx():
+            return (coll.axis_index(("model",))
+                    if "model" in self.mesh.axis_names
+                    else jnp.zeros((), jnp.int32))
+
+        def body_train(pl, bl, beta, b_t, noise_key, noise_var, lr):
+            widx = coll.axis_index(waxes)
+            half0 = model_idx() * n_half
+            batch_u = jax.tree_util.tree_map(lambda x: x[0], bl)
+            loss, g_sect = self._local_loss_and_grads(pl, batch_u)
+            signs, mags = self._compress_blocks(g_sect)
+            pl2, gn2 = self._mac_decode_update(
+                pl, signs, mags, beta, b_t, noise_key, noise_var, lr,
+                widx, half0, None)
+            loss_mean = coll.psum(loss, waxes) / jnp.float32(self.U)
+            return pl2, gn2, loss_mean
+
+        def body_grads_out(pl, bl):
+            batch_u = jax.tree_util.tree_map(lambda x: x[0], bl)
+            loss, g_sect = self._local_loss_and_grads(pl, batch_u)
+            return g_sect.astype(jnp.float32)[None], loss[None]
+
+        sm_train = jax.shard_map(
+            body_train, mesh=self.mesh,
+            in_specs=(self.spec, bspec, rep, sc, rep, sc, sc),
+            out_specs=(self.spec, sc, sc), check_vma=False)
+        wspec = self.grads_spec[0]
+        sm_grads_out = jax.shard_map(
+            body_grads_out, mesh=self.mesh,
+            in_specs=(self.spec, bspec),
+            out_specs=(self.grads_spec, P(wspec)), check_vma=False)
+
+        def round_impl(master, bl, t, key, noise_var, p_max, lr):
+            t, beta, b_t, nkey = self._prologue(t, key, noise_var, p_max)
+            pl2, gn2, loss = sm_train(master, bl, beta, b_t, nkey,
+                                      jnp.float32(noise_var),
+                                      jnp.float32(lr))
+            return pl2, _with_loss(self._stats(beta, b_t, gn2, noise_var),
+                                   loss)
+
+        def ref_impl(chunked, bl, t, key, noise_var, p_max, lr):
+            t, beta, b_t, nkey = self._prologue(t, key, noise_var, p_max)
+            cdt = self.compute_dtype
+            p_full = self.layout.master_to_tree(chunked.astype(cdt))
+
+            def one(u):
+                batch_u = jax.tree_util.tree_map(lambda x: x[u], bl)
+
+                def loss_of(p):
+                    loss, _ = self.model.loss_fn(p, batch_u,
+                                                 remat=self.remat)
+                    return loss
+
+                loss, g = jax.value_and_grad(loss_of)(p_full)
+                gm = self.layout.tree_to_master(g, dtype=cdt)
+                signs, mags = compress_chunks(
+                    self.ob, gm.astype(jnp.float32), None)
+                return loss, signs, mags
+
+            losses, signs, mags = jax.lax.map(
+                one, jnp.arange(self.U, dtype=jnp.int32))
+            chunked2, st = self._reference_tail(
+                chunked, signs, mags, beta, b_t, nkey, noise_var, lr)
+            return chunked2, _with_loss(st, jnp.mean(losses))
+
+        def ref_grads_impl(chunked, bl):
+            cdt = self.compute_dtype
+            p_full = self.layout.master_to_tree(chunked.astype(cdt))
+
+            def one(u):
+                batch_u = jax.tree_util.tree_map(lambda x: x[u], bl)
+
+                def loss_of(p):
+                    loss, _ = self.model.loss_fn(p, batch_u,
+                                                 remat=self.remat)
+                    return loss
+
+                loss, g = jax.value_and_grad(loss_of)(p_full)
+                return self.layout.tree_to_master(g, dtype=cdt).astype(
+                    jnp.float32), loss
+
+            g, losses = jax.lax.map(one, jnp.arange(self.U,
+                                                    dtype=jnp.int32))
+            return g, losses
+
+        fns = {
+            "round_train": jax.jit(round_impl),
+            "round_impl": round_impl,
+            "grads_in_layout": jax.jit(sm_grads_out),
+            # oracles are jitted for the same reason as ZooRound's: eager
+            # f32 fusion drifts final ulps vs the compiled sharded round
+            "ref_train": jax.jit(ref_impl),
+            "ref_impl": ref_impl,
+            "ref_grads": jax.jit(ref_grads_impl),
+        }
+        self._programs[key] = fns
+        return fns
+
+    # -- public entry points -----------------------------------------------
+
+    def round_train(self, master, batch, t, key, noise_var, p_max, lr):
+        """One real-gradient round. ``master``: sharded (n_chunks, D_c)
+        from ``shard_params(chunk_params(params))``; ``batch``: dict of
+        (U, ...)-stacked arrays from ``shard_batch``. Returns
+        (master', ZooTrainStats)."""
+        return self._fns(batch)["round_train"](master, batch, t, key,
+                                               noise_var, p_max, lr)
+
+    def grads_in_layout(self, master, batch):
+        """The real per-worker gradients as the sharded (U, n_chunks, D_c)
+        array ``round_from_grads`` consumes — the debug/parity surface for
+        "grads produced already in the compressor's layout". Returns
+        (grads, per-worker losses)."""
+        return self._fns(batch)["grads_in_layout"](master, batch)
+
+    def reference_round_train(self, chunked, batch, t, key, noise_var,
+                              p_max, lr):
+        """Single-device oracle of ``round_train`` (replicated inputs)."""
+        return self._fns(batch)["ref_train"](chunked, batch, t, key,
+                                             noise_var, p_max, lr)
+
+    def reference_grads(self, chunked, batch):
+        """Single-device oracle of ``grads_in_layout``."""
+        return self._fns(batch)["ref_grads"](chunked, batch)
+
+    # -- params layout ------------------------------------------------------
+
+    def chunk_params(self, params):
+        """Params pytree -> (n_chunks, D_c) in the sharded-flat layout
+        (overrides ZooRound's tail-padded flatten: the zoo-train order is
+        model-major per-leaf-slice, DESIGN.md §16)."""
+        return self.layout.tree_to_master(params)
+
+    def params_from_master(self, chunked):
+        """(n_chunks, D_c) -> full params pytree (checkpoint/eval
+        interop)."""
+        return self.layout.master_to_tree(jnp.asarray(chunked))
+
+    def unchunk(self, chunked):
+        leaves = jax.tree_util.tree_leaves(self.params_from_master(chunked))
+        return jnp.concatenate([x.reshape(-1) for x in leaves])
+
+    # -- multi-arm sweep ----------------------------------------------------
+
+    def _sweep_program(self, body, tag, batch, A: int, rounds: int, t0):
+        """scan-over-rounds of lax.map-over-arms of ``body``, jitted and
+        cached. The mesh sweep and its oracle are built from the SAME
+        wrapper so their program structure matches — the wrapping itself
+        changes XLA fusion inside the round body, so the bitwise parity
+        contract is per-structure: jitted round ↔ jitted reference round,
+        jitted sweep ↔ jitted reference sweep (DESIGN.md §16)."""
+        def sweep_impl(masters, bl, key, nv, pm, lr):
+            def one_round(ms, t):
+                def one_arm(args):
+                    m, nv_a, pm_a, lr_a = args
+                    return body(m, bl, t, key, nv_a, pm_a, lr_a)
+                m2, st = jax.lax.map(one_arm, (ms, nv, pm, lr))
+                return m2, st
+            ts = t0 + jnp.arange(rounds, dtype=jnp.int32)
+            return jax.lax.scan(one_round, masters, ts)
+
+        return self._programs.setdefault(
+            (tag, self._batch_key(batch), A, rounds, int(t0)),
+            jax.jit(sweep_impl))
+
+    def run_sweep(self, masters, batch, arms, rounds: int, *, key, t0=0):
+        """Arms × rounds in ONE jitted program: ``lax.scan`` over rounds
+        of ``lax.map`` over arms of the shard_map'd round body.
+
+        ``masters``: (A, n_chunks, D_c) (see ``shard_masters``);
+        ``arms``: dict of (A,) f32 arrays ``noise_var`` / ``p_max`` /
+        ``lr``. Returns (masters', ZooTrainStats stacked (rounds, A))."""
+        fns = self._fns(batch)
+        A = int(arms["noise_var"].shape[0])
+        jitted = self._sweep_program(fns["round_impl"], "sweep", batch, A,
+                                     rounds, t0)
+        return jitted(masters, batch, key, arms["noise_var"],
+                      arms["p_max"], arms["lr"])
+
+    def reference_sweep(self, masters, batch, arms, rounds: int, *, key,
+                        t0=0):
+        """Single-device oracle of ``run_sweep`` with the identical
+        scan/map wrapping (replicated (A, n_chunks, D_c) masters)."""
+        fns = self._fns(batch)
+        A = int(arms["noise_var"].shape[0])
+        jitted = self._sweep_program(fns["ref_impl"], "ref_sweep", batch,
+                                     A, rounds, t0)
+        return jitted(masters, batch, key, arms["noise_var"],
+                      arms["p_max"], arms["lr"])
+
+    def shard_masters(self, masters):
+        """(A, n_chunks, D_c) arm-stacked masters: chunk axis model-major
+        sharded exactly like a single master, arms replicated."""
+        spec = P(None, *self.spec)
+        return jax.device_put(jnp.asarray(masters),
+                              NamedSharding(self.mesh, spec))
+
+    # -- host driver --------------------------------------------------------
+
+    def run_rounds_train(self, master, batch, rounds: int, *, key,
+                         noise_var, p_max, lr, t0: int = 0):
+        """Host loop over jitted real-gradient rounds (one compiled
+        program, reused). Returns (master', list of host ZooTrainStats)."""
+        out = []
+        for t in range(t0, t0 + rounds):
+            master, st = self.round_train(master, batch, t, key, noise_var,
+                                          p_max, lr)
+            out.append(jax.tree_util.tree_map(np.asarray, st))
+        return master, out
+
+
+def build_zoo_train_round(model, mesh, ob: OBCSAAConfig,
+                          **kw) -> ZooTrainRound:
+    """Build the sharded real-backward zoo round for (model, mesh, ob)."""
+    return ZooTrainRound(model, mesh, ob, **kw)

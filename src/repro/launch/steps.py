@@ -35,7 +35,7 @@ def obcsaa_config(tcfg: TrainConfig) -> OBCSAAConfig:
                         topk=tcfg.cs_topk, biht_iters=tcfg.biht_iters,
                         decoder=tcfg.cs_decoder, recon_tau=tcfg.cs_tau,
                         noise_var=tcfg.noise_var, p_max=tcfg.p_max,
-                        spmd_topk=True)
+                        spmd_topk=True, packed=tcfg.cs_packed)
 
 
 # --- batch shardings -------------------------------------------------------------
@@ -125,7 +125,7 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh) -> Callable:
     U = num_workers(mesh)
 
     def loss_of(params, batch):
-        loss, _ = model.loss_fn(params, batch, remat=tcfg.remat)
+        loss, _ = model.loss_fn(params, batch, remat=tcfg.remat_mode)
         return loss
 
     if tcfg.aggregation == "mean":
@@ -287,6 +287,23 @@ def make_scan_train_step(model: Model, tcfg: TrainConfig, mesh,
         return params, opt_state, metrics
 
     return scan_step
+
+
+# --- zoo-scale real-gradient rounds (DESIGN.md §16) -------------------------------
+
+def make_zoo_train_round(model: Model, tcfg: TrainConfig, mesh, **kw):
+    """The sharded real-backward zoo round for (model, tcfg, mesh).
+
+    Builds :class:`repro.engine.zoo_train.ZooTrainRound` from the SAME
+    TrainConfig knobs the per-leaf OBCSAA train step consumes —
+    ``obcsaa_config(tcfg)`` for the wire geometry (including the packed
+    uplink), ``tcfg.remat_mode`` for the scan-body checkpointing policy —
+    so a config that trains through ``make_train_step`` sweeps through
+    the chunked zoo round unchanged. Extra kwargs (``scheduler``,
+    ``compute_dtype``, ``block_chunks``, ...) pass through."""
+    from repro.engine.zoo_train import ZooTrainRound
+    kw.setdefault("remat", tcfg.remat_mode)
+    return ZooTrainRound(model, mesh, obcsaa_config(tcfg), **kw)
 
 
 # --- serve steps -------------------------------------------------------------------

@@ -40,6 +40,64 @@ def make_batch(cfg, B, S, rng_seed=0):
     return batch
 
 
+def make_zoo_batch(cfg, U, B, S, rng_seed=0):
+    """(U, B, ...)-stacked per-worker batches for the zoo round: each of
+    the mesh's U FL workers trains on its own token stream."""
+    per = [make_batch(cfg, B, S, rng_seed=rng_seed * 1000 + u)
+           for u in range(U)]
+    return {k: jnp.stack([p[k] for p in per]) for k in per[0]}
+
+
+def run_zoo_train(args, cfg, tcfg, model, mesh):
+    """--zoo-train driver: real sharded backward passes through the
+    chunked (n_chunks, D_c) round (engine.zoo_train, DESIGN.md §16)."""
+    zr = steps_lib.make_zoo_train_round(model, tcfg, mesh)
+    print(f"zoo-train: D={zr.D:,} n_chunks={zr.n_chunks} "
+          f"({zr.n_model} model x {zr.U} workers x {zr.n_local} local), "
+          f"remat={tcfg.remat_mode}", flush=True)
+    params = model.init(jax.random.PRNGKey(0))
+    master = zr.chunk_params(params)
+    batch = zr.shard_batch(make_zoo_batch(cfg, zr.U, args.batch, args.seq))
+    key = jax.random.PRNGKey(1)
+    if args.arms > 1:
+        A = args.arms
+        arms = {"noise_var": jnp.float32(tcfg.noise_var)
+                * jnp.logspace(0, 2, A, dtype=jnp.float32),
+                "p_max": jnp.full((A,), tcfg.p_max, jnp.float32),
+                "lr": jnp.float32(args.lr)
+                * jnp.logspace(0, -1, A, dtype=jnp.float32)}
+        masters = zr.shard_masters(
+            jnp.broadcast_to(master, (A,) + master.shape))
+        t0 = time.time()
+        masters, stats = zr.run_sweep(masters, batch, arms, args.steps,
+                                      key=key)
+        losses = np.asarray(stats.loss)          # (rounds, A)
+        dt = time.time() - t0
+        for a in range(A):
+            print(f"arm {a}: noise_var={float(arms['noise_var'][a]):.2e} "
+                  f"lr={float(arms['lr'][a]):.3f} "
+                  f"loss {losses[0, a]:.4f} -> {losses[-1, a]:.4f}",
+                  flush=True)
+        print(f"{A} arms x {args.steps} rounds in one program "
+              f"({dt:.2f}s)", flush=True)
+    else:
+        msh = zr.shard_params(master)
+        for t in range(args.steps):
+            t0 = time.time()
+            msh, st = zr.round_train(msh, batch, t, key, tcfg.noise_var,
+                                     tcfg.p_max, args.lr)
+            print(f"round {t:4d} loss={float(st.loss):.4f} "
+                  f"b_t={float(st.b_t):.4f} ({time.time()-t0:.2f}s)",
+                  flush=True)
+        master = msh
+    if args.ckpt_dir:
+        from repro import checkpoint
+        final = masters[0] if args.arms > 1 else master
+        path = checkpoint.save(args.ckpt_dir, args.steps,
+                               {"params": zr.params_from_master(final)})
+        print(f"saved checkpoint: {path}")
+
+
 def main():
     if "--serve" in sys.argv[1:]:
         # dispatch to the scheduling-service CLI with the rest of the
@@ -55,6 +113,20 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--agg", default="obcsaa", choices=["mean", "obcsaa"])
+    ap.add_argument("--zoo-train", action="store_true",
+                    help="train through the chunked zoo round with REAL "
+                         "sharded backward passes (engine.zoo_train, "
+                         "DESIGN.md §16): master lives as the sharded-flat "
+                         "(n_chunks, D_c) array, grads flow into the "
+                         "packed 1-bit uplink with no full-D gather")
+    ap.add_argument("--arms", type=int, default=1,
+                    help="with --zoo-train: run an N-arm noise_var x lr "
+                         "grid as ONE jitted scan-over-rounds program "
+                         "(ZooTrainRound.run_sweep)")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["off", "full", "dots", "dots_no_batch"],
+                    help="scan-body checkpoint policy "
+                         "(TrainConfig.remat_policy)")
     ap.add_argument("--scan-rounds", type=int, default=0,
                     help="fuse N rounds per dispatch via the scan engine "
                          "(P2 pre-scheduled for the whole span in one "
@@ -83,8 +155,13 @@ def main():
     tcfg = TrainConfig(aggregation=args.agg, optimizer=args.optimizer,
                        learning_rate=args.lr, cs_chunk=args.cs_chunk,
                        cs_measure=args.cs_measure, cs_topk=args.cs_topk,
-                       biht_iters=10)
+                       biht_iters=10, cs_packed=args.zoo_train,
+                       remat_policy=args.remat_policy)
     model = build_model(cfg)
+    if args.zoo_train:
+        # NOTE: no ambient set_mesh — the zoo round owns its shard_map and
+        # the model forward runs fully manual inside it (DESIGN.md §16)
+        return run_zoo_train(args, cfg, tcfg, model, mesh)
     with jax.set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         opt = steps_lib.make_optimizer(tcfg)

@@ -60,7 +60,7 @@ def init_encdec(key, cfg: ModelConfig):
     }
 
 
-def encode(params, cfg: ModelConfig, frames):
+def encode(params, cfg: ModelConfig, frames, *, layer_resolver=None):
     """frames: (B, S_enc, d) stub embeddings -> encoder states (B,S_enc,d)."""
     dtype = dtype_of(cfg)
     x = frames.astype(dtype)
@@ -68,6 +68,8 @@ def encode(params, cfg: ModelConfig, frames):
     positions = jnp.arange(x.shape[1], dtype=jnp.int32)
 
     def body(x, lp):
+        if layer_resolver is not None:
+            lp = layer_resolver(lp)
         h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
         o, _ = attn.gqa_forward(lp["attn"], h, cfg.attention,
                                 positions=positions, causal=False,
@@ -87,7 +89,7 @@ def _dec_positions(params, positions, dtype):
 
 
 def decode_full(params, cfg: ModelConfig, tokens, enc_out, *, remat=True,
-                return_hidden=False):
+                return_hidden=False, layer_resolver=None):
     """Teacher-forced decoder pass. tokens: (B,S_dec). Returns logits."""
     dtype = dtype_of(cfg)
     x = embed(params["embedding"], tokens, dtype) * math.sqrt(cfg.d_model)
@@ -97,6 +99,8 @@ def decode_full(params, cfg: ModelConfig, tokens, enc_out, *, remat=True,
     enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
 
     def body(x, lp):
+        if layer_resolver is not None:
+            lp = layer_resolver(lp)
         h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
         o, _ = attn.gqa_forward(lp["attn"], h, cfg.attention,
                                 positions=positions, causal=True,
@@ -112,7 +116,8 @@ def decode_full(params, cfg: ModelConfig, tokens, enc_out, *, remat=True,
         x = x + mlp(lp["mlp"], h, cfg.gated_mlp)
         return x, None
 
-    body_fn = jax.checkpoint(body) if remat else body
+    from repro.models.transformer import remat_wrap
+    body_fn = remat_wrap(body, remat)
     x, _ = jax.lax.scan(body_fn, x, params["layers"])
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     if return_hidden:

@@ -49,17 +49,18 @@ def _lm_model(cfg: ModelConfig) -> Model:
     def init(rng):
         return transformer.init_lm(rng, cfg)
 
-    def forward(params, batch, remat=True):
+    def forward(params, batch, remat=True, layer_resolver=None):
         logits, aux, _ = transformer.lm_forward(
             params, cfg, batch["tokens"],
-            image_embeds=batch.get("image_embeds"), remat=remat)
+            image_embeds=batch.get("image_embeds"), remat=remat,
+            layer_resolver=layer_resolver)
         return logits
 
-    def loss_fn(params, batch, remat=True):
+    def loss_fn(params, batch, remat=True, layer_resolver=None):
         hidden, aux, _ = transformer.lm_forward(
             params, cfg, batch["tokens"],
             image_embeds=batch.get("image_embeds"), remat=remat,
-            return_hidden=True)
+            return_hidden=True, layer_resolver=layer_resolver)
         tgt = batch["targets"]
         B = tgt.shape[0]
         if is_vlm:  # image positions carry no LM loss
@@ -105,16 +106,19 @@ def _encdec_model(cfg: ModelConfig) -> Model:
     def init(rng):
         return encdec.init_encdec(rng, cfg)
 
-    def forward(params, batch, remat=True):
-        enc = encdec.encode(params, cfg, batch["frames"])
+    def forward(params, batch, remat=True, layer_resolver=None):
+        enc = encdec.encode(params, cfg, batch["frames"],
+                            layer_resolver=layer_resolver)
         return encdec.decode_full(params, cfg, batch["tokens"], enc,
-                                  remat=remat)
+                                  remat=remat, layer_resolver=layer_resolver)
 
-    def loss_fn(params, batch, remat=True):
+    def loss_fn(params, batch, remat=True, layer_resolver=None):
         from repro.models.layers import chunked_cross_entropy
-        enc = encdec.encode(params, cfg, batch["frames"])
+        enc = encdec.encode(params, cfg, batch["frames"],
+                            layer_resolver=layer_resolver)
         hidden = encdec.decode_full(params, cfg, batch["tokens"], enc,
-                                    remat=remat, return_hidden=True)
+                                    remat=remat, return_hidden=True,
+                                    layer_resolver=layer_resolver)
         loss = chunked_cross_entropy(hidden, batch["targets"],
                                      embedding=params["embedding"])
         return loss, {}
@@ -145,10 +149,10 @@ def _mlp_model(cfg: ModelConfig) -> Model:
     def init(rng):
         return init_mlp_mnist(rng, cfg.d_ff, cfg.d_model, cfg.vocab_size)
 
-    def loss_fn(params, batch, remat=False):
+    def loss_fn(params, batch, remat=False, layer_resolver=None):
         return mlp_mnist_loss(params, batch["x"], batch["y"]), {}
 
-    def forward(params, batch, remat=False):
+    def forward(params, batch, remat=False, layer_resolver=None):
         return mlp_mnist_logits(params, batch["x"])
 
     def unsupported(*a, **k):

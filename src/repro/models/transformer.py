@@ -160,12 +160,45 @@ def _apply_layer_full(lp, x, cfg: ModelConfig, flags, positions, shared_block):
     return x, cache_seed, aux
 
 
+def remat_wrap(body, remat):
+    """Wrap a scan body per the remat knob (DESIGN.md §16).
+
+    ``remat`` is a bool (legacy: True == "full") or a policy name:
+    "off" saves every residual (scan keeps all layer activations),
+    "full" saves nothing (recompute the whole block in the backward),
+    "dots" / "dots_no_batch" save matmul outputs only
+    (``jax.checkpoint_policies``) — the middle ground that trades one
+    extra gather+norm recompute for not holding attention internals."""
+    if remat in (False, None, "off"):
+        return body
+    if remat in (True, "full"):
+        return jax.checkpoint(body)
+    policies = {
+        "dots": jax.checkpoint_policies.checkpoint_dots,
+        "dots_no_batch":
+            jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    }
+    if remat not in policies:
+        raise ValueError(
+            f"remat policy {remat!r} not in "
+            f"{('off', 'full') + tuple(policies)}")
+    return jax.checkpoint(body, policy=policies[remat])
+
+
 def lm_forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
-               remat=True, collect_cache=False, return_hidden=False):
+               remat=True, collect_cache=False, return_hidden=False,
+               layer_resolver=None):
     """tokens: (B,S_text). Returns (logits_or_hidden, aux, cache or None).
 
     For vlm, image_embeds (B,N,d) are prepended (total seq = N + S_text).
-    return_hidden=True skips the unembed (chunked-CE training path)."""
+    return_hidden=True skips the unembed (chunked-CE training path).
+
+    ``layer_resolver`` maps the per-layer param slice to the form the
+    block math consumes, INSIDE the scan body (and inside the remat
+    boundary, so whatever it materializes is recomputed, not saved). The
+    zoo-train path passes the all-gather resolver that turns model-axis
+    weight shards into full per-layer weights one layer at a time —
+    nothing dense at full model size ever exists (DESIGN.md §16)."""
     dtype = dtype_of(cfg)
     x = embed(params["embedding"], tokens, dtype) * math.sqrt(cfg.d_model)
     if cfg.family == "vlm":
@@ -180,12 +213,19 @@ def lm_forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
     def body(carry, xs):
         x, aux_acc = carry
         lp, fl = xs
+        # scan-carry layout contract: activations ride the scan sharded
+        # over workers on batch, replicated over model (a soft hint; see
+        # DESIGN.md §16 — inside full-manual shard_map it degrades to a
+        # no-op and the body IS already per-device).
+        x = constrain(x, ("data", None, None))
+        if layer_resolver is not None:
+            lp = layer_resolver(lp)
         x, cache_seed, aux = _apply_layer_full(lp, x, cfg, fl, positions,
                                                shared_block)
         ys = cache_seed if collect_cache else None
         return (x, aux_acc + aux), ys
 
-    body_fn = jax.checkpoint(body) if remat else body
+    body_fn = remat_wrap(body, remat)
     (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
                                     (params["layers"], flags))
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)

@@ -37,9 +37,14 @@ r = βq coupling) and ζ (eq. 39 q = b consensus, the paper's λ) — as an
 ``AdmmDuals`` pytree. Seeding a solve with the duals of a nearby problem
 (the previous service tick's channels, a Gauss-Markov-correlated fade
 draw) starts the multipliers at prices that are already close to optimal,
-so convergence takes fewer outer iterations; the primal state always
+so convergence takes fewer outer iterations; by default the primal state
 re-initializes from the problem itself, so warm and cold solves converge
-to the same β (the parity flag benchmarks/serve_bench.py gates).
+to the same β (the parity flag benchmarks/serve_bench.py gates). An
+optional ``warm_beta`` also seeds the primal from a cached schedule
+projected to a feasible point; measured on correlated fades it saves no
+outer iterations over dual-only and gives up the bitwise cold-parity
+guarantee (serve/warm-parity telemetry rows), so it stays off by
+default everywhere.
 """
 from __future__ import annotations
 
@@ -105,12 +110,28 @@ def _greedy_prefix_bound(prob: BatchedProblem, caps) -> jnp.ndarray:
 
 # --- ADMM iteration (batched-native: leaves (B, U), lane scalars (B,)) -------------
 
-def _init_state(prob: BatchedProblem, duals: Optional[AdmmDuals] = None):
+def _init_state(prob: BatchedProblem, duals: Optional[AdmmDuals] = None,
+                warm_beta: Optional[jnp.ndarray] = None):
     """Initial ADMM state; ``duals`` warm-starts the multipliers only —
-    the primal (q, β, b) always re-initializes from the problem, so a
-    warm solve walks to the same fixed point from better prices."""
+    by default the primal (q, β, b) re-initializes from the problem, so
+    a warm solve walks to the same fixed point from better prices.
+
+    ``warm_beta`` additionally seeds the primal from a cached schedule,
+    projected to a feasible point of P3: binarized to {0,1} with empty
+    lanes falling back to the all-on cold init, b and q re-derived from
+    the projected β via the eq. 16 closed form (a stale b would violate
+    the q = b consensus from iteration 0). Primal warm starts move the
+    ADMM trajectory, so the fixed point is NOT guaranteed bitwise-equal
+    to cold-start — measured on correlated fades it saves no outer
+    iterations over dual-only (serve/warm-parity telemetry), which is
+    why the serve loop carries duals only."""
     caps = prob.caps()
-    beta0 = jnp.ones_like(caps)
+    if warm_beta is None:
+        beta0 = jnp.ones_like(caps)
+    else:
+        wb = (warm_beta.astype(caps.dtype) > 0.5).astype(caps.dtype)
+        empty = jnp.sum(wb, axis=-1, keepdims=True) == 0
+        beta0 = jnp.where(empty, jnp.ones_like(caps), wb)
     b0 = jnp.maximum(prob.optimal_bt(beta0), 1e-6)          # (B,)
     z = jnp.zeros_like(caps)
     nu, xi, zeta = (z, z, z) if duals is None else (
@@ -185,8 +206,8 @@ def _outer_iter(prob: BatchedProblem, cfg: SchedConfig, st):
 
 
 @functools.partial(jax.jit, static_argnames="cfg")
-def _init_batched(prob, cfg, duals=None):
-    return _init_state(prob, duals)
+def _init_batched(prob, cfg, duals=None, warm_beta=None):
+    return _init_state(prob, duals, warm_beta)
 
 
 @functools.partial(jax.jit, static_argnames="cfg")
@@ -276,7 +297,8 @@ def _results_batched(prob, beta):
 def admm_solve_batched_jit(prob: BatchedProblem,
                            cfg: Optional[SchedConfig] = None,
                            duals: Optional[AdmmDuals] = None,
-                           return_duals: bool = False):
+                           return_duals: bool = False,
+                           warm_beta: Optional[jnp.ndarray] = None):
     """Fully device-resident Algorithm 2 — the scan-safe sibling of
     ``admm_solve_batched`` (callable inside ``lax.scan``/``vmap``, e.g.
     from the FL engine's round body, DESIGN.md §11).
@@ -291,8 +313,11 @@ def admm_solve_batched_jit(prob: BatchedProblem,
     call must stay inside a jitted program.
 
     ``duals`` warm-starts the multipliers (the engine carries them round
-    to round next to prev-β, DESIGN.md §15); ``return_duals=True`` also
-    returns an ``AdmmSolveInfo`` with the exit duals + iteration counts."""
+    to round next to prev-β, DESIGN.md §15); ``warm_beta`` additionally
+    seeds the primal from a cached schedule (see ``_init_state`` — moves
+    the trajectory, so no bitwise-parity guarantee vs cold);
+    ``return_duals=True`` also returns an ``AdmmSolveInfo`` with the
+    exit duals + iteration counts."""
     cfg = cfg or _DEFAULT
 
     def chunk(st):
@@ -305,7 +330,8 @@ def admm_solve_batched_jit(prob: BatchedProblem,
     def not_done(st):
         return ~jnp.all(st[6] | (st[7] >= cfg.max_iters))
 
-    st = jax.lax.while_loop(not_done, chunk, _init_state(prob, duals))
+    st = jax.lax.while_loop(not_done, chunk,
+                            _init_state(prob, duals, warm_beta))
     beta, best0, active = _project_batched(prob, st[1])
     polished = jax.vmap(lambda p, b, r0: _polish_one(p, cfg, b, r0))(
         prob, beta, best0)
@@ -344,13 +370,18 @@ def _compact(sub, st, idx, invalid):
 def admm_solve_batched(prob: BatchedProblem,
                        cfg: Optional[SchedConfig] = None,
                        duals: Optional[AdmmDuals] = None,
-                       return_duals: bool = False):
+                       return_duals: bool = False,
+                       warm_beta: Optional[jnp.ndarray] = None):
     """Solve B independent P2 instances in one device-resident pass.
 
     Returns (β (B, U), b_t (B,), R_t (B,)); with ``return_duals=True``
     also an ``AdmmSolveInfo`` whose exit multipliers warm-start the next
     nearby solve (the serve loop carries them tick to tick, DESIGN.md
-    §15) and whose ``iters`` count each lane's outer iterations."""
+    §15) and whose ``iters`` count each lane's outer iterations.
+    ``warm_beta`` seeds the primal from a cached schedule, projected
+    feasible (see ``_init_state``); it is measured-not-faster than
+    dual-only warm starts and forfeits cold-start bitwise parity, so
+    nothing in the repo passes it by default."""
     cfg = cfg or _DEFAULT
     B, U = prob.B, prob.U
     beta_out = np.zeros((B, U), np.float32)
@@ -359,7 +390,7 @@ def admm_solve_batched(prob: BatchedProblem,
     iters_out = np.zeros(B, np.int32)
     idx = np.arange(B)                       # original slot of each lane
     valid = np.ones(B, bool)                 # False for pad duplicates
-    sub, st = prob, _init_batched(prob, cfg, duals)
+    sub, st = prob, _init_batched(prob, cfg, duals, warm_beta)
 
     def retire(fin):
         slots = idx[fin]

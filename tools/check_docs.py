@@ -13,8 +13,9 @@ Four checks, exit non-zero on any failure:
 4. The subsystem sections (``REQUIRED_CITED``: the worker-axes mapping §3,
    chunked-Φ §4, decode §9, sched §10, engine §11, theory §12, packed
    1-bit codec §13, zoo sharding + checkpoint/restore §14, the serve
-   loop §15) are each cited from code at least once — a renumbering or
-   a subsystem losing its docs trail fails CI.
+   loop §15, real sharded backward passes §16) are each cited from code
+   at least once — a renumbering or a subsystem losing its docs trail
+   fails CI.
 
   python tools/check_docs.py
 """
@@ -35,7 +36,7 @@ SECTION_RE = re.compile(r"^##\s+§(\d+)", re.MULTILINE)
 DESIGN_REF_RE = re.compile(r"DESIGN(?:\.md)?\s+§(\d+)((?:[/,]\s*§\d+)*)")
 EXTRA_REF_RE = re.compile(r"§(\d+)")
 # subsystem sections that must stay cited from code (check 4)
-REQUIRED_CITED = {3, 4, 9, 10, 11, 12, 13, 14, 15}
+REQUIRED_CITED = {3, 4, 9, 10, 11, 12, 13, 14, 15, 16}
 
 
 def github_slug(heading: str) -> str:
