@@ -193,7 +193,8 @@ def theory_table() -> str:
 
 def zoo_rows():
     """zoo_bench rows: CI-scale surrogate rows under ``zoo:v1`` and
-    real-backward rows under ``zoo:v2``, plus the zoo-scale ≥1B rows
+    real-backward rows under ``zoo:v3`` (state-carry API: the parity
+    gates cover optimizer moments + EF residuals), plus the ≥1B rows
     under ``zoo:v1:full`` / ``zoo:v2:full`` (regenerated by
     ``python -m benchmarks.zoo_bench --full``), all from
     experiments/bench_cache.json; run fresh once if the cache is

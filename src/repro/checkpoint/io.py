@@ -39,6 +39,16 @@ def _to_numpy(leaf) -> np.ndarray:
     return arr
 
 
+def _storage_dtype(dtype) -> str:
+    """The on-disk dtype a template leaf is stored as: ml_dtypes leaves
+    (bfloat16, ...) round-trip through float32 (see ``_to_numpy``),
+    everything else is stored as-is."""
+    d = np.dtype(dtype)
+    if d.kind == "V" or "bfloat16" in str(d):
+        return "float32"
+    return str(d)
+
+
 def _flatten_with_paths(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)
     leaves = [(jax.tree_util.keystr(path), _to_numpy(leaf))
@@ -126,6 +136,15 @@ def restore(ckpt_dir: str, step: int, like: Any,
                 f"checkpoint leaf {key!r} has shape {tuple(arr.shape)}, "
                 f"template expects {tuple(l.shape)} — the run geometry "
                 f"(D, U, arms, chunking) must match the saved sweep")
+        want = _storage_dtype(l.dtype)
+        if str(arr.dtype) != want:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has dtype {arr.dtype}, template "
+                f"expects {np.dtype(l.dtype)} (stored as {want}) — "
+                f"optimizer moments and round carries restore "
+                f"dtype-strict; a silent cast would break bitwise resume "
+                f"(DESIGN.md §17). Re-save the checkpoint with the "
+                f"template's dtypes or fix the restore template.")
         restored.append(jax.numpy.asarray(arr).astype(l.dtype))
     if shardings is not None:
         shard_flat = jax.tree_util.tree_leaves(shardings)

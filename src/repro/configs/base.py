@@ -206,6 +206,10 @@ class TrainConfig:
     aggregation: str = "mean"       # mean | obcsaa | topk_aa
     optimizer: str = "sgd"          # sgd | momentum | adam  (paper: plain GD)
     learning_rate: float = 0.1
+    # Per-worker error-feedback residual (Stich et al., §11/§17): the
+    # residual accumulates what the 1-bit uplink dropped, so it only
+    # means anything under the compressing aggregator.
+    error_feedback: bool = False
     # OBCSAA knobs (paper notation)
     cs_chunk: int = 4096            # D_c  (chunked measurement, DESIGN.md §4)
     cs_measure: int = 1024          # S_c  (compressed rows per chunk)
@@ -250,6 +254,20 @@ class TrainConfig:
             raise ValueError(
                 f"TrainConfig.remat_policy={self.remat_policy!r} not in "
                 f"{valid_remat}")
+        valid_opt = ("sgd", "momentum", "adam")
+        if self.optimizer not in valid_opt:
+            raise ValueError(
+                f"TrainConfig.optimizer={self.optimizer!r} is not a "
+                f"registered optimizer; choose one of "
+                f"{' | '.join(valid_opt)} (repro.optim.OPTIMIZERS)")
+        if self.error_feedback and self.aggregation != "obcsaa":
+            raise ValueError(
+                f"TrainConfig.error_feedback=True needs "
+                f"aggregation='obcsaa': the EF residual accumulates what "
+                f"the 1-bit compressed uplink dropped (DESIGN.md §11/§17) "
+                f"— under aggregation={self.aggregation!r} nothing is "
+                f"dropped and the residual geometry is undefined. Set "
+                f"aggregation='obcsaa' or error_feedback=False.")
 
     @property
     def remat_mode(self):

@@ -1,5 +1,6 @@
 from repro.data.mnist import load_mnist, partition_workers
 from repro.data.synthetic import synthetic_mnist, token_stream
+from repro.data.tokens import TokenShards, write_token_shards
 
 __all__ = ["load_mnist", "partition_workers", "synthetic_mnist",
-           "token_stream"]
+           "token_stream", "TokenShards", "write_token_shards"]

@@ -1,0 +1,147 @@
+"""repro.data.tokens — memory-mapped token shards for the zoo-train
+data path (DESIGN.md §17).
+
+The zoo-train CLI's default batches are synthetic token streams
+(``launch.train.make_zoo_batch``); this module is the opt-in real-data
+path behind ``--data``: a directory of flat binary token shards, memory-
+mapped so a multi-GB corpus costs no resident memory, plus deterministic
+per-worker window sampling.
+
+Layout: ``<dir>/tokens_meta.json`` (dtype + shard file names) next to
+``shard_*.tokens`` flat binaries. Shards are plain little-endian token
+streams with NO framing — alignment is validated on open (a file whose
+byte size is not a whole number of tokens is truncated or written with
+the wrong dtype, and fails loudly instead of shifting every later token).
+
+Sampling is keyed exactly like the round RNG (DESIGN.md §11/§14): round
+``t`` folds the absolute round index into the data key, worker ``u``
+folds again, so
+
+* the same ``(key, t)`` draws the same (U, B, S) batch on any host, any
+  mesh shape, and after any checkpoint resume (no data-iterator state to
+  serialize), and
+* workers draw independent streams — the non-IID knob is WHICH shards a
+  worker samples from, left for the follow-up (ROADMAP).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Sequence
+
+import jax
+import numpy as np
+
+META_NAME = "tokens_meta.json"
+
+
+class TokenShards:
+    """Open memory-mapped token shards + deterministic batch sampling."""
+
+    def __init__(self, directory: str, memmaps, dtype: np.dtype,
+                 names: Sequence[str]):
+        self.directory = directory
+        self.memmaps = list(memmaps)
+        self.dtype = dtype
+        self.names = list(names)
+        self.lengths = np.array([m.shape[0] for m in self.memmaps],
+                                dtype=np.int64)
+
+    # -- on-disk format ----------------------------------------------------
+
+    @staticmethod
+    def write(directory: str, shards, dtype=np.int32) -> str:
+        """Write 1-D token arrays as flat binary shards + meta; returns
+        the directory. (The export half of the format — tests and the
+        smoke path build corpora from ``data.token_stream`` with it.)"""
+        os.makedirs(directory, exist_ok=True)
+        dtype = np.dtype(dtype)
+        names = []
+        for i, arr in enumerate(shards):
+            a = np.ascontiguousarray(np.asarray(arr, dtype=dtype).ravel())
+            name = f"shard_{i:05d}.tokens"
+            a.tofile(os.path.join(directory, name))
+            names.append(name)
+        meta = {"dtype": dtype.name, "shards": names}
+        with open(os.path.join(directory, META_NAME), "w") as f:
+            json.dump(meta, f)
+        return directory
+
+    @classmethod
+    def open(cls, directory: str) -> "TokenShards":
+        """Memory-map every shard listed in the meta, validating token
+        alignment (DESIGN.md §17)."""
+        meta_p = os.path.join(directory, META_NAME)
+        if not os.path.isfile(meta_p):
+            raise FileNotFoundError(
+                f"{directory!r} has no {META_NAME}; --data expects a "
+                f"token-shard directory written by TokenShards.write")
+        with open(meta_p) as f:
+            meta = json.load(f)
+        dtype = np.dtype(meta["dtype"])
+        mms = []
+        for name in meta["shards"]:
+            p = os.path.join(directory, name)
+            if not os.path.isfile(p):
+                raise FileNotFoundError(
+                    f"token shard {name!r} listed in {META_NAME} is "
+                    f"missing from {directory!r}")
+            size = os.path.getsize(p)
+            if size == 0 or size % dtype.itemsize:
+                raise ValueError(
+                    f"token shard {name!r} is misaligned: {size} bytes "
+                    f"is not a whole positive number of {dtype.name} "
+                    f"tokens (itemsize {dtype.itemsize}) — the file is "
+                    f"truncated or was written with a different dtype; "
+                    f"re-export the shard or fix 'dtype' in {META_NAME}")
+            mms.append(np.memmap(p, dtype=dtype, mode="r"))
+        return cls(directory, mms, dtype, meta["shards"])
+
+    @property
+    def total_tokens(self) -> int:
+        return int(self.lengths.sum())
+
+    # -- sampling ----------------------------------------------------------
+
+    def _check_window(self, S: int):
+        need = S + 1
+        short = np.flatnonzero(self.lengths < need)
+        if short.size:
+            i = int(short[0])
+            raise ValueError(
+                f"token shard {self.names[i]!r} holds "
+                f"{int(self.lengths[i])} tokens but seq_len={S} sampling "
+                f"needs windows of {need}; drop the shard from "
+                f"{META_NAME} or lower --seq")
+
+    def sample_worker(self, key, t: int, u: int, B: int, S: int):
+        """Worker ``u``'s (B, S) next-token batch for round ``t``:
+        windows at positions drawn from ``fold_in(fold_in(key, t), u)``
+        — the same absolute-index keying as the round RNG, so resume
+        needs no iterator state (DESIGN.md §17)."""
+        self._check_window(S)
+        k = jax.random.fold_in(jax.random.fold_in(key, t), u)
+        ks, ko = jax.random.split(k)
+        n = len(self.memmaps)
+        sidx = np.asarray(jax.random.randint(ks, (B,), 0, n))
+        span = self.lengths[sidx] - (S + 1)
+        u01 = np.asarray(jax.random.uniform(ko, (B,), jax.numpy.float32))
+        offs = np.minimum((u01 * (span + 1)).astype(np.int64), span)
+        rows = np.stack([
+            np.asarray(self.memmaps[int(si)][int(off):int(off) + S + 1])
+            for si, off in zip(sidx, offs)])
+        rows = rows.astype(np.int32)
+        return rows[:, :-1], rows[:, 1:]
+
+    def sample_zoo_batch(self, key, t: int, U: int, B: int, S: int):
+        """(U, B, S) stacked per-worker batch dict for round ``t`` —
+        drop-in for ``launch.train.make_zoo_batch`` (feed through
+        ``ZooTrainRound.shard_batch``)."""
+        toks, tgts = zip(*(self.sample_worker(key, t, u, B, S)
+                           for u in range(U)))
+        return {"tokens": np.stack(toks), "targets": np.stack(tgts)}
+
+
+def write_token_shards(directory: str, shards, dtype=np.int32) -> str:
+    """Module-level alias of :meth:`TokenShards.write`."""
+    return TokenShards.write(directory, shards, dtype=dtype)

@@ -37,6 +37,7 @@ from repro.core.sparsify import (flatten_pytree, topk_sparsify,
                                  topk_sparsify_bisect)
 from repro.engine.config import ENGINE_SCHEDULERS, FLConfig
 from repro.engine.state import Arms, EngineState, RoundStats
+from repro.optim.optimizers import ef_step
 from repro.sched.admm import AdmmDuals, admm_solve_batched_jit
 from repro.sched.greedy import greedy_solve_batched
 from repro.sched.problem import BatchedProblem
@@ -170,15 +171,13 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
                 "host reference path")
         return beta[0], b_t[0], duals_out
 
-    def ef_split(grads, residual):
-        """EF correction + residual update (Stich et al., paper ref [37]).
-        The top-κ selection follows ``ob.spmd_topk`` like the compression
-        core: bisection thresholds are the scan/SPMD-native path (sort
-        lowers to an XLA CPU/GSPMD-hostile full sort; DESIGN.md §9).
-        Returns (corrected, residual', sparse (U, D_pad)) — the sparse
-        vector IS sparse_κ of what obcsaa transmits, so the compressor
-        consumes it directly instead of re-thresholding (DESIGN.md §11)."""
-        corrected = grads + residual
+    def _ef_sparse_approx(corrected):
+        """approx_fn for ``optim.ef_step``: per-chunk top-κ of the padded
+        corrected gradient. The selection follows ``ob.spmd_topk`` like
+        the compression core: bisection thresholds are the scan/SPMD-
+        native path (sort lowers to an XLA CPU/GSPMD-hostile full sort;
+        DESIGN.md §9). Returns (sparse (U, D_pad), its unpadded view) —
+        the residual accumulates exactly what the top-κ dropped."""
         gp = jnp.pad(corrected, ((0, 0), (0, pad)))
         gc = gp.reshape(gp.shape[0], -1, ob.chunk)
         if ob.spmd_topk:
@@ -187,7 +186,17 @@ def build_engine(cfg: FLConfig, loss_fn: Callable, opt, D: int, U: int,
         else:
             sp, _ = topk_sparsify(gc, ob.topk)
         sp = sp.reshape(gp.shape)
-        return corrected, corrected - sp[:, :D], sp
+        return sp, sp[:, :D]
+
+    def ef_split(grads, residual):
+        """EF correction + residual update via the shared ``optim.ef_step``
+        (one Stich-et-al implementation repo-wide, DESIGN.md §17).
+        Returns (corrected, residual', sparse (U, D_pad)) — the sparse
+        vector IS sparse_κ of what obcsaa transmits, so the compressor
+        consumes it directly instead of re-thresholding (DESIGN.md §11)."""
+        sp, new_residual, corrected = ef_step(grads, residual,
+                                              _ef_sparse_approx)
+        return corrected, new_residual, sp
 
     def round_given_schedule(state: EngineState, arm: Arms, worker_data,
                              k_weights, t, h, fade, beta, b_t,

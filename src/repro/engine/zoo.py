@@ -220,12 +220,14 @@ class ZooRound:
         c = self.grad_scale * (_hash_u01(idx, widx, t) - 0.5)
         return jnp.where(idx < jnp.uint32(self.D), p_blk - c, 0.0)
 
-    def _mac_decode_update(self, pl, signs, mags, beta, b_t, noise_key,
-                           noise_var, lr, widx, half0, phi):
-        """Shared tail of both round bodies, INSIDE shard_map: packed MAC
+    def _mac_decode(self, signs, mags, beta, b_t, noise_key, noise_var,
+                    widx, half0, phi):
+        """MAC + decode of both round bodies, INSIDE shard_map: packed MAC
         over the worker axes (eq. 12), post-processing + AWGN (eq. 13),
-        decode of this device's quarter only (eq. 43), local update
-        (eq. 14)."""
+        decode of this device's quarter only (eq. 43). Returns
+        (ghat (n_local, D_c), ‖ĝ‖² over the full vector) — the update is
+        applied by the caller, so stateful optimizers (engine/zoo_train.py,
+        DESIGN.md §17) reuse the identical decode path."""
         ob = self.ob
         y, ksum, mag_sum = shardmap_mac(
             ob, signs, mags, self.waxes, k_weight=jnp.float32(1.0),
@@ -248,6 +250,14 @@ class ZooRound:
         axes_all = self.waxes + (("model",) if "model"
                                  in self.mesh.axis_names else ())
         gn2 = coll.psum(jnp.sum(ghat * ghat), axes_all)
+        return ghat, gn2
+
+    def _mac_decode_update(self, pl, signs, mags, beta, b_t, noise_key,
+                           noise_var, lr, widx, half0, phi):
+        """_mac_decode + the plain eq. 14 local update (the surrogate and
+        array-fed round bodies; zoo_train applies its optimizer instead)."""
+        ghat, gn2 = self._mac_decode(signs, mags, beta, b_t, noise_key,
+                                     noise_var, widx, half0, phi)
         return pl - lr * ghat, gn2
 
     def _decode_blocks(self, yq, mbar_q, phi):
@@ -403,11 +413,13 @@ class ZooRound:
         return self._reference_tail(chunked, signs, mags, beta, b_t, nkey,
                                     noise_var, lr)
 
-    def _reference_tail(self, chunked, signs, mags, beta, b_t, nkey,
-                        noise_var, lr):
-        """Single-device MAC + decode + update given per-worker
-        (U, n_chunks, ...) compressed uploads — shared by the surrogate,
-        array-fed, and zoo-train (engine/zoo_train.py) oracles."""
+    def _reference_mac_decode(self, signs, mags, beta, b_t, nkey,
+                              noise_var):
+        """Single-device MAC + decode given per-worker (U, n_chunks, ...)
+        compressed uploads — shared by the surrogate, array-fed, and
+        zoo-train (engine/zoo_train.py) oracles. Returns (ghat, ‖ĝ‖²);
+        the update is applied by the caller so stateful optimizers reuse
+        the identical decode path (DESIGN.md §17)."""
         ob = self.ob
         if ob.packed:
             from repro.kernels.sign import unpack_bits
@@ -429,6 +441,13 @@ class ZooRound:
         # parity at every geometry; see _decode_blocks)
         ghat = self._decode_blocks(y, mbar, None)
         gn2 = jnp.sum(ghat * ghat)
+        return ghat, gn2
+
+    def _reference_tail(self, chunked, signs, mags, beta, b_t, nkey,
+                        noise_var, lr):
+        """_reference_mac_decode + the plain eq. 14 update."""
+        ghat, gn2 = self._reference_mac_decode(signs, mags, beta, b_t,
+                                               nkey, noise_var)
         return (chunked - jnp.float32(lr) * ghat,
                 self._stats(beta, b_t, gn2, noise_var))
 

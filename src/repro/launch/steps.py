@@ -23,11 +23,13 @@ from repro.dist.sharding import best_spec, constrain, infer_param_sharding
 from repro.launch.mesh import num_workers, worker_axes
 from repro.models.registry import Model
 from repro.models.transformer import cache_shardings_hints
-from repro.optim.optimizers import Optimizer, adam, momentum, sgd
+from repro.optim.optimizers import Optimizer, make as make_opt
 
 
 def make_optimizer(tcfg: TrainConfig) -> Optimizer:
-    return {"sgd": sgd, "momentum": momentum, "adam": adam}[tcfg.optimizer]()
+    # one registry for the engine, the CLI, and the zoo-train carries
+    # (repro.optim.OPTIMIZERS, DESIGN.md §17)
+    return make_opt(tcfg.optimizer)
 
 
 def obcsaa_config(tcfg: TrainConfig) -> OBCSAAConfig:
@@ -303,6 +305,8 @@ def make_zoo_train_round(model: Model, tcfg: TrainConfig, mesh, **kw):
     ``compute_dtype``, ``block_chunks``, ...) pass through."""
     from repro.engine.zoo_train import ZooTrainRound
     kw.setdefault("remat", tcfg.remat_mode)
+    kw.setdefault("optimizer", tcfg.optimizer)
+    kw.setdefault("error_feedback", tcfg.error_feedback)
     return ZooTrainRound(model, mesh, obcsaa_config(tcfg), **kw)
 
 

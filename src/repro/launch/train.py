@@ -50,15 +50,37 @@ def make_zoo_batch(cfg, U, B, S, rng_seed=0):
 
 def run_zoo_train(args, cfg, tcfg, model, mesh):
     """--zoo-train driver: real sharded backward passes through the
-    chunked (n_chunks, D_c) round (engine.zoo_train, DESIGN.md §16)."""
+    chunked (n_chunks, D_c) round (engine.zoo_train, DESIGN.md §16/§17).
+
+    The carry is the full ZooTrainState — master + optimizer moments +
+    per-worker EF residuals — so --ckpt-dir/--resume restore mid-run with
+    non-trivial optimizer state bit-for-bit. With --data, every round
+    samples a fresh (U, B, S) batch from the memmapped token shards,
+    keyed by the absolute round index (no iterator state to serialize)."""
     zr = steps_lib.make_zoo_train_round(model, tcfg, mesh)
     print(f"zoo-train: D={zr.D:,} n_chunks={zr.n_chunks} "
           f"({zr.n_model} model x {zr.U} workers x {zr.n_local} local), "
+          f"optimizer={zr.optimizer_name} ef={zr.error_feedback} "
           f"remat={tcfg.remat_mode}", flush=True)
     params = model.init(jax.random.PRNGKey(0))
     master = zr.chunk_params(params)
-    batch = zr.shard_batch(make_zoo_batch(cfg, zr.U, args.batch, args.seq))
     key = jax.random.PRNGKey(1)
+    data_key = jax.random.PRNGKey(2)
+    shards = None
+    if args.data:
+        from repro.data import TokenShards
+        shards = TokenShards.open(args.data)
+        print(f"data: {len(shards.names)} token shards, "
+              f"{shards.total_tokens:,} tokens from {args.data}",
+              flush=True)
+
+    def zoo_batch(t):
+        if shards is not None:
+            return zr.shard_batch(shards.sample_zoo_batch(
+                data_key, t, zr.U, args.batch, args.seq))
+        return zr.shard_batch(
+            make_zoo_batch(cfg, zr.U, args.batch, args.seq))
+
     if args.arms > 1:
         A = args.arms
         arms = {"noise_var": jnp.float32(tcfg.noise_var)
@@ -66,11 +88,19 @@ def run_zoo_train(args, cfg, tcfg, model, mesh):
                 "p_max": jnp.full((A,), tcfg.p_max, jnp.float32),
                 "lr": jnp.float32(args.lr)
                 * jnp.logspace(0, -1, A, dtype=jnp.float32)}
-        masters = zr.shard_masters(
-            jnp.broadcast_to(master, (A,) + master.shape))
+        states = zr.shard_state(zr.init_sweep_state(
+            jnp.broadcast_to(master, (A,) + master.shape)), arms=A)
+        t_start = 0
+        if args.resume:
+            got = zr.restore_state(args.ckpt_dir, arms=A)
+            if got is not None:
+                states, t_start = got
+                print(f"resumed sweep at round {t_start}", flush=True)
+        batch = zoo_batch(t_start)   # sweeps run one fixed batch
         t0 = time.time()
-        masters, stats = zr.run_sweep(masters, batch, arms, args.steps,
-                                      key=key)
+        states, stats = zr.run_sweep(states, batch, arms,
+                                     args.steps - t_start, key=key,
+                                     t0=t_start)
         losses = np.asarray(stats.loss)          # (rounds, A)
         dt = time.time() - t0
         for a in range(A):
@@ -78,24 +108,38 @@ def run_zoo_train(args, cfg, tcfg, model, mesh):
                   f"lr={float(arms['lr'][a]):.3f} "
                   f"loss {losses[0, a]:.4f} -> {losses[-1, a]:.4f}",
                   flush=True)
-        print(f"{A} arms x {args.steps} rounds in one program "
+        print(f"{A} arms x {args.steps - t_start} rounds in one program "
               f"({dt:.2f}s)", flush=True)
+        if args.ckpt_dir:
+            path = zr.save_state(args.ckpt_dir, args.steps, states,
+                                 t_next=args.steps)
+            print(f"saved checkpoint: {path}")
     else:
-        msh = zr.shard_params(master)
-        for t in range(args.steps):
+        state = zr.shard_state(zr.init_state(master))
+        t_start = 0
+        if args.resume:
+            got = zr.restore_state(args.ckpt_dir)
+            if got is not None:
+                state, t_start = got
+                print(f"resumed zoo-train at round {t_start}", flush=True)
+        batch = None
+        for t in range(t_start, args.steps):
+            if shards is not None or batch is None:
+                batch = zoo_batch(t)
             t0 = time.time()
-            msh, st = zr.round_train(msh, batch, t, key, tcfg.noise_var,
-                                     tcfg.p_max, args.lr)
+            state, st = zr.round_train(state, batch, t, key,
+                                       tcfg.noise_var, tcfg.p_max,
+                                       args.lr)
             print(f"round {t:4d} loss={float(st.loss):.4f} "
                   f"b_t={float(st.b_t):.4f} ({time.time()-t0:.2f}s)",
                   flush=True)
-        master = msh
-    if args.ckpt_dir:
-        from repro import checkpoint
-        final = masters[0] if args.arms > 1 else master
-        path = checkpoint.save(args.ckpt_dir, args.steps,
-                               {"params": zr.params_from_master(final)})
-        print(f"saved checkpoint: {path}")
+            if args.ckpt_dir and args.ckpt_every \
+                    and (t + 1) % args.ckpt_every == 0:
+                zr.save_state(args.ckpt_dir, t + 1, state, t_next=t + 1)
+        if args.ckpt_dir:
+            path = zr.save_state(args.ckpt_dir, args.steps, state,
+                                 t_next=args.steps)
+            print(f"saved checkpoint: {path}")
 
 
 def main():
@@ -132,7 +176,19 @@ def main():
                          "(P2 pre-scheduled for the whole span in one "
                          "batched solver call; DESIGN.md §11)")
     ap.add_argument("--lr", type=float, default=3e-2)
-    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--optimizer", default="sgd",
+                    help="sgd | momentum | adam — moments live as sharded "
+                         "(n_chunks, D_c) carries in the zoo round "
+                         "(DESIGN.md §17)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="per-worker EF residual over the 1-bit uplink "
+                         "(Stich et al.; DESIGN.md §11/§17). Needs "
+                         "--agg obcsaa")
+    ap.add_argument("--data", default=None,
+                    help="token-shard directory (repro.data.TokenShards) "
+                         "— with --zoo-train, each round samples a fresh "
+                         "per-worker batch keyed by the absolute round "
+                         "index; default: fixed synthetic streams")
     ap.add_argument("--cs-chunk", type=int, default=1024)
     ap.add_argument("--cs-measure", type=int, default=256)
     ap.add_argument("--cs-topk", type=int, default=64)
@@ -153,7 +209,9 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh() if args.smoke else make_production_mesh()
     tcfg = TrainConfig(aggregation=args.agg, optimizer=args.optimizer,
-                       learning_rate=args.lr, cs_chunk=args.cs_chunk,
+                       learning_rate=args.lr,
+                       error_feedback=args.error_feedback,
+                       cs_chunk=args.cs_chunk,
                        cs_measure=args.cs_measure, cs_topk=args.cs_topk,
                        biht_iters=10, cs_packed=args.zoo_train,
                        remat_policy=args.remat_policy)

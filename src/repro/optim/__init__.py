@@ -1,6 +1,7 @@
-from repro.optim.optimizers import (Optimizer, adam, momentum, sgd,
-                                    with_error_feedback)
+from repro.optim.optimizers import (OPTIMIZERS, Optimizer, adam, ef_step,
+                                    make, momentum, sgd, with_error_feedback)
 from repro.optim.schedules import constant, cosine_decay, warmup_cosine
 
-__all__ = ["Optimizer", "adam", "momentum", "sgd", "with_error_feedback",
-           "constant", "cosine_decay", "warmup_cosine"]
+__all__ = ["OPTIMIZERS", "Optimizer", "adam", "ef_step", "make", "momentum",
+           "sgd", "with_error_feedback", "constant", "cosine_decay",
+           "warmup_cosine"]

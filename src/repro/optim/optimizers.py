@@ -1,9 +1,16 @@
 """Optimizers from scratch (no optax in this container).
 
 The paper uses plain GD (``sgd``); momentum/adam are substrate options.
-``with_error_feedback`` wraps any optimizer with an EF-SGD residual
-accumulator — a beyond-paper option that compensates the OBCSAA
-compression error across rounds (Stich et al., paper's ref. [37]).
+Every optimizer works on ANY pytree of arrays — including a single
+chunked ``(n_chunks, D_c)`` master array, which is how the zoo-scale
+round (engine/zoo_train.py, DESIGN.md §17) carries its moments: the
+``update`` math is elementwise, so the same ``Optimizer`` that steps a
+params pytree steps a shard-local master block inside ``shard_map``.
+
+``ef_step`` is THE error-feedback correction (Stich et al., paper's
+ref. [37]) — the single implementation behind ``with_error_feedback``,
+the §11 engine's fused EF split, and the zoo round's sharded residual
+carry (one algorithm, one code path, DESIGN.md §17).
 """
 from __future__ import annotations
 
@@ -77,6 +84,38 @@ def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
     return Optimizer(init, update)
 
 
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adam": adam}
+
+
+def make(name: str, **kw) -> Optimizer:
+    """Build a registered optimizer by name; the single registry behind
+    the train CLI, the §11 engine, and the zoo-scale round carries
+    (DESIGN.md §17)."""
+    if name not in OPTIMIZERS:
+        raise ValueError(
+            f"optimizer {name!r} is not registered; choose one of "
+            f"{' | '.join(sorted(OPTIMIZERS))}")
+    return OPTIMIZERS[name](**kw)
+
+
+def ef_step(grads, residual, approx_fn: Callable) -> Tuple:
+    """One error-feedback step (Stich et al., paper's ref. [37]):
+    corrected = g + e; (out, approx) = approx_fn(corrected);
+    e' = corrected − approx.
+
+    ``approx_fn`` maps the corrected gradient to ``(out, approx)`` where
+    ``out`` is whatever the caller transmits (a wire representation, the
+    sparse vector itself, ...) and ``approx`` is the lossy approximation
+    ACTUALLY applied, in the corrected gradient's own space — the residual
+    accumulates exactly what the uplink dropped. Returns
+    ``(out, new_residual, corrected)``. This is the one shared EF
+    implementation (engine/core.py's fused split, the zoo round's sharded
+    carry, and ``with_error_feedback`` all call it; DESIGN.md §17)."""
+    corrected = grads + residual
+    out, approx = approx_fn(corrected)
+    return out, corrected - approx, corrected
+
+
 def with_error_feedback(compress_fn: Callable) -> Callable:
     """EF wrapper for the FL aggregation path: maintains a per-worker
     residual e; transmits compress(g + e); e' = (g + e) − decompressed.
@@ -84,8 +123,7 @@ def with_error_feedback(compress_fn: Callable) -> Callable:
     compress_fn: flat -> (wire_repr, decompressed_flat). Returns a function
     (flat_grad, residual) -> (wire_repr, new_residual)."""
     def apply(flat_grad, residual):
-        corrected = flat_grad + residual
-        wire, decompressed = compress_fn(corrected)
-        return wire, corrected - decompressed
+        wire, new_residual, _ = ef_step(flat_grad, residual, compress_fn)
+        return wire, new_residual
 
     return apply

@@ -62,6 +62,26 @@ def test_restore_validation_errors(tmp_path):
         checkpoint.restore(d, 2, bad)
 
 
+def test_restore_dtype_strict_message(tmp_path):
+    """Restore validates per-leaf dtypes against the template: optimizer
+    moments and round carries restore dtype-strict, a silent cast would
+    break bitwise resume (DESIGN.md §17). The one legitimate aliasing is
+    ml_dtypes storage — a bfloat16 template accepts the float32 bytes
+    ``save`` wrote for it."""
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 1, {"m": jnp.zeros((3,), jnp.float32)})
+    bad = {"m": jax.ShapeDtypeStruct((3,), jnp.float16)}
+    with pytest.raises(ValueError, match=r"has dtype float32, template "
+                                         r"expects float16.*dtype-strict"):
+        checkpoint.restore(d, 1, bad)
+    with pytest.raises(ValueError, match=r"expects int32"):
+        checkpoint.restore(d, 1, {"m": jax.ShapeDtypeStruct((3,),
+                                                            jnp.int32)})
+    out = checkpoint.restore(d, 1, {"m": jax.ShapeDtypeStruct(
+        (3,), jnp.bfloat16)})        # bf16 is STORED as f32: accepted
+    assert out["m"].dtype == jnp.bfloat16
+
+
 @pytest.mark.parametrize("victim", ["tree.msgpack", "arrays.npz"])
 def test_corrupt_checkpoint_errors(tmp_path, victim):
     """A truncated/garbled file must surface as ValueError telling the
@@ -159,6 +179,7 @@ SCRIPT_ELASTIC = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.core.obcsaa import OBCSAAConfig
     from repro.engine import EngineRun, FLConfig, make_arms
+    from repro.optim import make as make_opt
 
     U, D = 4, 1200
     cfg = FLConfig(aggregator="obcsaa", scheduler="all", rounds=8,
@@ -171,7 +192,10 @@ SCRIPT_ELASTIC = textwrap.dedent("""
     loss = lambda p, d: 0.5 * jnp.sum((p["w"] - d["c"]) ** 2)
     arms = make_arms(cfg, noise_var=[1e-4, 1e-3, 1e-2, 1e-1])
     mesh = jax.make_mesh((4, 2), ("data", "model"))
-    mk = lambda: EngineRun(cfg, loss, params0, data, np.ones(U))
+    # adam: the checkpoint carries NON-TRIVIAL optimizer moments through
+    # the device-layout transitions (DESIGN.md §17)
+    mk = lambda: EngineRun(cfg, loss, params0, data, np.ones(U),
+                           optimizer=make_opt("adam"))
 
     def trim(d, keep):
         for s in os.listdir(d):
@@ -187,6 +211,8 @@ SCRIPT_ELASTIC = textwrap.dedent("""
     base = tempfile.mkdtemp()
     # uninterrupted single-placement run = the reference trajectory
     ref = mk().run_sweep(arms, eval_every=3)["state"]
+    assert float(np.abs(np.asarray(ref.opt_state["m"]["w"])).sum()) > 0
+    assert float(np.abs(np.asarray(ref.opt_state["v"]["w"])).sum()) > 0
 
     # 1 -> 8: save on default placement, finish on the 8-device mesh with
     # the arm axis sharded over the workers

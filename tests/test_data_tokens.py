@@ -1,0 +1,150 @@
+"""Memory-mapped token shards + deterministic per-worker sampling
+(repro.data.tokens, DESIGN.md §17) — the --data path of the zoo-train
+CLI: write/open round-trip, fold_in-keyed determinism (same (key, t)
+draws the same batch, no iterator state to serialize for resume), and
+the loud alignment/window validation messages."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import TokenShards, token_stream, write_token_shards
+from repro.data.tokens import META_NAME
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _corpus(tmp_path, n_shards=3, n_tokens=257, vocab=101):
+    rng = np.random.default_rng(0)
+    shards = [rng.integers(0, vocab, size=n_tokens + 13 * i).astype(np.int32)
+              for i in range(n_shards)]
+    d = str(tmp_path / "toks")
+    TokenShards.write(d, shards)
+    return d, shards
+
+
+def test_write_open_roundtrip(tmp_path):
+    d, shards = _corpus(tmp_path)
+    ts = TokenShards.open(d)
+    assert ts.total_tokens == sum(s.size for s in shards)
+    assert list(ts.lengths) == [s.size for s in shards]
+    for mm, s in zip(ts.memmaps, shards):
+        assert np.array_equal(np.asarray(mm), s)
+    # module-level alias writes the identical format
+    d2 = write_token_shards(str(tmp_path / "toks2"), shards)
+    assert TokenShards.open(d2).total_tokens == ts.total_tokens
+
+
+def test_sampling_deterministic_and_next_token(tmp_path):
+    """Same (key, t) -> the same (U, B, S) batch on every call (resume
+    needs no data-iterator state); different rounds and workers draw
+    different windows; targets are the next-token shift of tokens."""
+    d, _ = _corpus(tmp_path)
+    ts = TokenShards.open(d)
+    key = jax.random.PRNGKey(5)
+    U, B, S = 3, 4, 16
+    b1 = ts.sample_zoo_batch(key, 7, U, B, S)
+    b2 = ts.sample_zoo_batch(key, 7, U, B, S)
+    assert b1["tokens"].shape == (U, B, S)
+    for k in b1:
+        assert np.array_equal(b1[k], b2[k]), k
+    b3 = ts.sample_zoo_batch(key, 8, U, B, S)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    assert not np.array_equal(b1["tokens"][0], b1["tokens"][1])
+    # next-token contract: window of S+1, split as [: -1] / [1:]
+    assert np.array_equal(b1["tokens"][..., 1:], b1["targets"][..., :-1])
+
+
+def test_open_missing_meta_message(tmp_path):
+    with pytest.raises(FileNotFoundError,
+                       match=rf"has no {META_NAME}; --data expects"):
+        TokenShards.open(str(tmp_path / "empty"))
+
+
+def test_open_missing_shard_message(tmp_path):
+    d, _ = _corpus(tmp_path)
+    os.remove(os.path.join(d, "shard_00001.tokens"))
+    with pytest.raises(FileNotFoundError,
+                       match=r"shard_00001\.tokens.*missing"):
+        TokenShards.open(d)
+
+
+def test_misaligned_shard_message(tmp_path):
+    """A shard whose byte size is not a whole number of tokens is
+    truncated or was written with a different dtype — it must fail
+    loudly at open, not shift every later token (DESIGN.md §17)."""
+    d, _ = _corpus(tmp_path)
+    p = os.path.join(d, "shard_00000.tokens")
+    with open(p, "ab") as f:
+        f.write(b"\x00\x01\x02")     # 3 stray bytes: not a whole int32
+    with pytest.raises(ValueError,
+                       match=r"shard_00000\.tokens.*is misaligned: "
+                             r"\d+ bytes is not a whole positive number "
+                             r"of int32 tokens"):
+        TokenShards.open(d)
+
+
+def test_wrong_meta_dtype_is_misaligned(tmp_path):
+    """Meta declaring a dtype the files were not written with trips the
+    same alignment check (int32 payload vs int64 meta)."""
+    d, _ = _corpus(tmp_path, n_shards=1, n_tokens=257)   # odd token count
+    meta_p = os.path.join(d, META_NAME)
+    meta = json.load(open(meta_p))
+    meta["dtype"] = "int64"
+    json.dump(meta, open(meta_p, "w"))
+    with pytest.raises(ValueError, match=r"int64 tokens.*different "
+                                         r"dtype"):
+        TokenShards.open(d)
+
+
+def test_short_shard_window_message(tmp_path):
+    d = str(tmp_path / "short")
+    TokenShards.write(d, [np.arange(10, dtype=np.int32)])
+    ts = TokenShards.open(d)
+    with pytest.raises(ValueError, match=r"holds 10 tokens but "
+                                         r"seq_len=32.*windows of 33"):
+        ts.sample_zoo_batch(jax.random.PRNGKey(0), 0, 2, 2, 32)
+
+
+@pytest.mark.slow
+def test_zoo_train_cli_data_resume(tmp_path):
+    """The wired CLI path: --zoo-train --data --optimizer adam
+    --error-feedback trains off the token shards, checkpoints the FULL
+    carry (master + moments + residuals + t_next), and --resume finishes
+    bit-for-bit identical to the uninterrupted run — per-round batches
+    are re-sampled from the absolute round index, so the data stream
+    needs no serialized state (DESIGN.md §17)."""
+    from repro import checkpoint
+    tok, _ = token_stream(4, 700, 100, seed=3)
+    d = write_token_shards(str(tmp_path / "toks"), list(np.asarray(tok)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "gemma2-2b", "--smoke", "--zoo-train", "--batch", "2",
+            "--seq", "32", "--cs-chunk", "256", "--cs-measure", "64",
+            "--cs-topk", "16", "--optimizer", "adam", "--error-feedback",
+            "--data", d]
+
+    def run(extra):
+        r = subprocess.run(base + extra, env=env, capture_output=True,
+                           text=True, timeout=560)
+        assert r.returncode == 0, \
+            f"ARGS {extra}\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+        return r.stdout
+
+    da, db = str(tmp_path / "a"), str(tmp_path / "b")
+    run(["--steps", "4", "--ckpt-dir", da])
+    run(["--steps", "2", "--ckpt-dir", db])
+    out = run(["--steps", "4", "--ckpt-dir", db, "--resume"])
+    assert "resumed zoo-train at round 2" in out
+    a = np.load(os.path.join(checkpoint.step_dir(da, 4), "arrays.npz"))
+    b = np.load(os.path.join(checkpoint.step_dir(db, 4), "arrays.npz"))
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        assert np.array_equal(a[k], b[k]), f"leaf {k} differs after resume"

@@ -138,6 +138,35 @@ def test_scan_equals_host_bitwise_warm_ef(mnist_task, scheduler):
                                rtol=1e-6)
 
 
+@pytest.mark.parametrize("opt_name,kw", [("momentum", {"beta": 0.9}),
+                                         ("adam", {})])
+def test_scan_equals_host_bitwise_optimizer_moments(mnist_task, opt_name,
+                                                    kw):
+    """§17 satellite of the optimizer-state tentpole: with a STATEFUL
+    optimizer (momentum/adam moments riding the scan carry) and error
+    feedback on, the scan engine still matches the host loop bitwise —
+    params, every opt_state moment leaf, and the EF residual."""
+    from repro.optim import make
+    wd, params0, loss_fn, _, _ = mnist_task
+    cfg = FLConfig(aggregator="obcsaa", scheduler="greedy_batched",
+                   rounds=12, obcsaa=_mnist_ob(warm_start=True),
+                   const=CONST, error_feedback=True)
+    scan_tr = FederatedTrainer(cfg, loss_fn, params0, wd, np.full(U, 4.0),
+                               optimizer=make(opt_name, **kw))
+    scan_tr.run()
+    host_tr = FederatedTrainer(dataclasses.replace(cfg, mode="host"),
+                               loss_fn, params0, wd, np.full(U, 4.0),
+                               optimizer=make(opt_name, **kw))
+    host_tr.run()
+    assert scan_tr._mode == "scan" and host_tr._mode == "host"
+    assert _tree_eq(scan_tr.params, host_tr.params)
+    assert _tree_eq(scan_tr.opt_state, host_tr.opt_state)
+    assert _tree_eq(scan_tr._state.residual, host_tr._state.residual)
+    # the moments did accumulate (non-trivial state went through parity)
+    assert any(float(np.abs(np.asarray(x)).sum()) > 0
+               for x in jax.tree_util.tree_leaves(scan_tr.opt_state))
+
+
 def test_sweep_lane_equals_single_run(mnist_task):
     """vmap over arms must not change any lane's trajectory: lane i of a
     3-arm noise sweep matches the single-arm engine run at that σ² to

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ModuleNotFoundError:
@@ -12,11 +13,24 @@ except ModuleNotFoundError:
 from repro.core.power_control import feasible, max_bt, tx_power
 from repro.core.quantize import pack_bits, sign_pm1, unpack_bits
 from repro.core.sparsify import topk_sparsify, topk_sparsify_chunked
+from repro.dist.flat_layout import FlatShardLayout
+from repro.kernels.sign import pack_signs, unpack_signs
 from repro.models.layers import chunked_cross_entropy
 from repro.models.registry import cross_entropy
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
+
+
+class _StubMesh:
+    """Just enough mesh for ``FlatShardLayout.build``: the layout consumes
+    only ``dict(mesh.shape)`` (via ``dist.sharding._axis_sizes`` after
+    ``compat._unwrap``), so property tests can sweep mesh shapes without
+    allocating devices."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
 
 
 @given(st.integers(1, 63), st.integers(0, 2 ** 31 - 1))
@@ -66,6 +80,86 @@ def test_max_bt_is_tight_and_feasible(u, seed, pmax):
     assert bool(feasible(beta, kw, bt, h, pmax))
     p = tx_power(beta, kw, bt, h)
     assert np.isclose(float(jnp.max(p)), pmax, rtol=1e-4)
+
+
+@given(st.integers(0, 2), st.integers(1, 4), st.integers(1, 3),
+       st.integers(0, 2 ** 31 - 1))
+def test_flat_layout_chunk_unchunk_roundtrip(mp_exp, gran, cw, seed):
+    """The model-major sharded-flat layout (dist.flat_layout, DESIGN.md
+    §16/§17) is lossless and gran-aligned over randomized parameter
+    structures and mesh shapes:
+
+    - ``master_to_tree(tree_to_master(p))`` returns every leaf bitwise;
+    - ``n_half`` is a whole multiple of ``gran`` (every worker owns whole
+      chunk rows) and ``n_chunks == mp * n_half``;
+    - section padding is exactly zero;
+    - the device-local ``section_to_tree``/``tree_to_section`` pair
+      round-trips each m-section bitwise — the invariant that makes
+      layout conversion zero-communication in the round."""
+    rng = np.random.default_rng(seed)
+    mp, chunk = 2 ** mp_exp, 16 * cw
+    shapes, params = {}, {}
+    for i in range(int(rng.integers(1, 5))):
+        r, c = int(rng.integers(1, 5)), int(rng.integers(1, 5))
+        shape = ((mp * r, c), (c, mp * r), (mp * r,))[int(rng.integers(3))]
+        shapes[f"w{i}"] = jax.ShapeDtypeStruct(shape, jnp.float32)
+        params[f"w{i}"] = rng.standard_normal(shape).astype(np.float32)
+    layout = FlatShardLayout.build(shapes, _StubMesh(data=gran, model=mp),
+                                   chunk=chunk, gran=gran)
+    assert layout.n_half % gran == 0
+    assert layout.n_chunks == mp * layout.n_half
+    assert layout.D == sum(v.size for v in params.values())
+    assert layout.D_pad >= layout.D
+
+    master = layout.tree_to_master(params)
+    assert master.shape == (layout.n_chunks, chunk)
+    back = layout.master_to_tree(master)
+    for k in params:
+        assert np.array_equal(np.asarray(back[k]), params[k]), k
+
+    sections = np.asarray(master).reshape(mp, layout.n_half * chunk)
+    assert (sections[:, layout.sec_elems:] == 0).all()   # pad is zero
+    for m in range(mp):
+        sect = master.reshape(mp, layout.n_half, chunk)[m]
+        again = layout.tree_to_section(layout.section_to_tree(sect))
+        assert np.array_equal(np.asarray(again), np.asarray(sect)), m
+
+
+def test_flat_layout_indivisible_leaf_message():
+    """A leaf with no model-divisible dim fails at build, naming the
+    leaf (DESIGN.md §16)."""
+    shapes = {"odd": jax.ShapeDtypeStruct((3, 5), jnp.float32)}
+    with pytest.raises(ValueError, match=r"odd.*divisible by the "
+                                         r"model-axis size 2"):
+        FlatShardLayout.build(shapes, _StubMesh(data=1, model=2), chunk=8)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_signs_roundtrip_with_signed_zeros(rows, words, seed):
+    """The 32-per-uint32 packed codec (kernels.sign, DESIGN.md §13):
+    ``unpack_signs(pack_signs(s)) == s`` bitwise on ±1 symbols, and the
+    fused sign+pack on RAW values agrees with sign-then-pack — including
+    x == +0.0 and x == -0.0, both of which the repo-wide sign convention
+    maps to +1 (the ``x >= 0`` predicate is signed-zero-blind)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, 32 * words)).astype(np.float32)
+    flat = x.reshape(-1)
+    idx = rng.choice(flat.size, size=min(8, flat.size), replace=False)
+    flat[idx[0::2]] = 0.0
+    flat[idx[1::2]] = -0.0
+    x = jnp.asarray(flat.reshape(x.shape))
+    s = sign_pm1(x)
+    packed = pack_signs(x)
+    assert np.array_equal(np.asarray(packed), np.asarray(pack_signs(s)))
+    assert np.array_equal(np.asarray(unpack_signs(packed)), np.asarray(s))
+    assert (np.asarray(s).reshape(-1)[idx] == 1.0).all()   # sign(±0) = +1
+
+
+def test_pack_signs_misaligned_axis_message():
+    """A sign axis that does not pack into whole uint32 words fails
+    loudly with the offending length (DESIGN.md §13)."""
+    with pytest.raises(ValueError, match=r"multiple of 32; got 40"):
+        pack_signs(jnp.ones((2, 40)))
 
 
 @given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))

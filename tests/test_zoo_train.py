@@ -56,17 +56,103 @@ def test_zoo_train_round_host_mesh():
     assert np.array_equal(np.asarray(g), np.asarray(gr))
     assert np.array_equal(np.asarray(losses), np.asarray(lref))
 
-    m2, st = zr.round_train(master, batch, 0, jax.random.PRNGKey(1),
+    s2, st = zr.round_train(master, batch, 0, jax.random.PRNGKey(1),
                             1e-4, 10.0, 0.1)
+    m2 = np.asarray(s2.master)
     assert np.isfinite(float(st.loss))
-    assert np.isfinite(np.asarray(m2)).all()
-    assert not np.array_equal(np.asarray(m2), np.asarray(master))
+    assert np.isfinite(m2).all()
+    assert not np.array_equal(m2, np.asarray(master))
     for name, term in zip(st.budget._fields, st.budget):
         assert np.isfinite(np.asarray(term)).all(), name
     # the round consumed REAL gradients: params round-trip finitely
-    p2 = zr.params_from_master(m2)
+    p2 = zr.params_from_master(s2)
     assert all(np.isfinite(np.asarray(x)).all()
                for x in jax.tree_util.tree_leaves(p2))
+
+
+@pytest.mark.parametrize("opt,kw", [("momentum", {"beta": 0.9}),
+                                    ("adam", {})])
+def test_zoo_train_stateful_round_host_mesh(opt, kw):
+    """Momentum/adam moments live as sharded (n_chunks, D_c) carries and
+    the per-worker EF residual as a (U, n_chunks, D_c) grads-layout carry
+    (DESIGN.md §17): a 2-round chain on the host mesh matches the jitted
+    oracle bitwise on EVERY carry leaf, and the residual is live (the
+    1-bit uplink drops mass, so it must be non-zero after a round)."""
+    cfg = get_smoke_config("mnist-mlp")
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    zr = build_zoo_train_round(model, mesh, OBCSAAConfig(**PARITY_OB),
+                               optimizer=opt, opt_kwargs=kw,
+                               error_feedback=True)
+    params = model.init(jax.random.PRNGKey(0))
+    chunked = zr.chunk_params(params)
+    kx, ky = jax.random.split(jax.random.PRNGKey(3))
+    raw = {"x": 0.1 * jax.random.normal(kx, (zr.U, 2, 784), jnp.float32),
+           "y": jax.random.randint(ky, (zr.U, 2), 0, 10, jnp.int32)}
+    batch = zr.shard_batch(raw)
+    key = jax.random.PRNGKey(1)
+
+    s = zr.shard_state(zr.init_state(chunked))
+    r = zr.init_state(chunked)
+    for t in range(2):
+        s, st = zr.round_train(s, batch, t, key, 1e-4, 10.0, 0.1)
+        r, rst = zr.reference_round_train(r, raw, t, key, 1e-4, 10.0, 0.1)
+        for i, (a, b) in enumerate(zip(jax.tree_util.tree_leaves(s),
+                                       jax.tree_util.tree_leaves(r))):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (t, i)
+        assert np.isfinite(float(st.loss))
+    assert float(np.abs(np.asarray(s.residual)).sum()) > 0.0
+
+
+def test_zoo_train_state_validation_messages():
+    """The carry is validated eagerly at the host entry points: a
+    stateful round rejects bare masters, and the EF residual geometry
+    errors name the expected (U, n_chunks, D_c) shape instead of dying
+    as an opaque spec error inside shard_map (DESIGN.md §17)."""
+    from repro.engine.zoo_train import ZooTrainState
+    cfg = get_smoke_config("mnist-mlp")
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    ob = OBCSAAConfig(**PARITY_OB)
+    zr = build_zoo_train_round(model, mesh, ob, optimizer="adam",
+                               error_feedback=True)
+    chunked = zr.chunk_params(model.init(jax.random.PRNGKey(0)))
+    want = (zr.U, zr.n_chunks, ob.chunk)
+
+    # stateful round rejects a bare master array
+    with pytest.raises(TypeError, match=r"optimizer='adam'.*stateful "
+                                        r"moments/residuals"):
+        zr.as_state(chunked)
+    # EF on, residual missing
+    bad = ZooTrainState(master=chunked, opt=zr.optimizer.init(chunked),
+                        residual=None)
+    with pytest.raises(ValueError, match=r"has no EF residual.*"
+                                         r"\(U, n_chunks, D_c\)"):
+        zr._check_state(bad)
+    # EF on, residual with the wrong geometry
+    bad = bad._replace(residual=jnp.zeros((1, 2, 3), jnp.float32))
+    with pytest.raises(ValueError,
+                       match=r"shape \(1, 2, 3\), expected"):
+        zr._check_state(bad)
+    # EF off, residual present
+    zr2 = build_zoo_train_round(model, mesh, ob)
+    full = ZooTrainState(master=chunked, opt=(),
+                         residual=jnp.zeros(want, jnp.float32))
+    with pytest.raises(ValueError, match=r"error_feedback=False.*WITH "
+                                         r"an EF residual"):
+        zr2._check_state(full)
+
+
+def test_train_config_optimizer_and_ef_messages():
+    """TrainConfig validates the optimizer name and the EF/aggregation
+    coupling eagerly, naming the offending values (DESIGN.md §17)."""
+    with pytest.raises(ValueError, match=r"optimizer='adamw' is not a "
+                                         r"registered optimizer"):
+        TrainConfig(optimizer="adamw")
+    with pytest.raises(ValueError, match=r"error_feedback=True needs "
+                                         r"aggregation='obcsaa'"):
+        TrainConfig(aggregation="mean", error_feedback=True)
+    TrainConfig(aggregation="obcsaa", error_feedback=True)   # fine
 
 
 def test_scanned_vs_unrolled_layer_stack_bitwise():
@@ -179,7 +265,8 @@ SCRIPT_TRAIN_PARITY = textwrap.dedent("""
         m, st = zr.round_train(m, batch, t, key, 1e-4, 10.0, 0.05)
         rc, rst = zr.reference_round_train(rc, raw, t, key, 1e-4, 10.0,
                                            0.05)
-        assert np.array_equal(np.asarray(m), np.asarray(rc)), t
+        assert np.array_equal(np.asarray(m.master),
+                              np.asarray(rc.master)), t
         # loss is telemetry, not round state: the mesh computes it as
         # psum/U, the oracle as mean-over-lax.map — different reduction
         # structures, so close-not-bitwise by contract
@@ -198,9 +285,115 @@ SCRIPT_TRAIN_PARITY = textwrap.dedent("""
     ms = zr.shard_masters(stacked)
     m2, _ = zr.run_sweep(ms, batch, arms, 2, key=key)
     r2, _ = zr.reference_sweep(stacked, raw, arms, 2, key=key)
-    assert np.array_equal(np.asarray(m2), np.asarray(r2)), "sweep"
+    assert np.array_equal(np.asarray(m2.master),
+                          np.asarray(r2.master)), "sweep"
     print("OK")
 """)
+
+
+SCRIPT_OPT_STATE_PARITY = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core.obcsaa import OBCSAAConfig
+    from repro.engine.zoo_train import build_zoo_train_round
+    from repro.models.registry import build_model
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    ob = OBCSAAConfig(chunk=256, measure=64, topk=16, biht_iters=3,
+                      recon_alg="iht", spmd_topk=True, packed=True,
+                      bisect_iters=16)
+    cfg = get_smoke_config("gemma2-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (4, 2, 32), 0,
+                             cfg.vocab_size, jnp.int32)
+    raw = {"tokens": tok, "targets": jnp.roll(tok, -1, axis=-1)}
+
+    def leaves_equal(a, b, tag):
+        la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+        assert len(la) == len(lb), tag
+        for i, (x, y) in enumerate(zip(la, lb)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (tag, i)
+
+    # sharded optimizer moments + per-worker EF residuals: a >=3-round
+    # chain on the 4x2 mesh is bitwise vs the jitted oracle on EVERY
+    # carry leaf (master, moments, adam's step counter, residual)
+    for name, kw in (("momentum", dict(beta=0.9)), ("adam", {})):
+        zr = build_zoo_train_round(model, mesh, ob, optimizer=name,
+                                   opt_kwargs=kw, error_feedback=True)
+        chunked = zr.chunk_params(params)
+        batch = zr.shard_batch(raw)
+        s = zr.shard_state(zr.init_state(chunked))
+        r = zr.init_state(chunked)
+        for t in range(3):
+            s, st = zr.round_train(s, batch, t, key, 1e-4, 10.0, 0.05)
+            r, rst = zr.reference_round_train(r, raw, t, key, 1e-4,
+                                              10.0, 0.05)
+            leaves_equal(s, r, (name, t))
+            assert np.isfinite(float(st.loss)), (name, t)
+        assert float(np.abs(np.asarray(s.residual)).sum()) > 0, name
+        print(name + " chain parity OK", flush=True)
+
+    # mid-chain checkpoint resume with non-trivial adam moments + EF
+    # residuals: 4 rounds == 2 rounds -> save_state -> restore_state ->
+    # 2 rounds, bit for bit on all carry leaves (zr is the adam round)
+    s0 = zr.shard_state(zr.init_state(chunked))
+    full, half = s0, s0
+    for t in range(4):
+        full, _ = zr.round_train(full, batch, t, key, 1e-4, 10.0, 0.05)
+    for t in range(2):
+        half, _ = zr.round_train(half, batch, t, key, 1e-4, 10.0, 0.05)
+    with tempfile.TemporaryDirectory() as td:
+        zr.save_state(td, 2, half, t_next=2)
+        res, t0 = zr.restore_state(td)
+        assert t0 == 2, t0
+        for t in range(t0, 4):
+            res, _ = zr.round_train(res, batch, t, key, 1e-4, 10.0, 0.05)
+    leaves_equal(full, res, "chain resume")
+    print("chain resume OK", flush=True)
+
+    # mid-SWEEP resume: the one-program arms x rounds scan restarted
+    # from a restored arm-stacked carry at t0=2 lands bitwise on the
+    # uninterrupted 4-round sweep
+    A = 2
+    arms = {"noise_var": jnp.array([1e-4, 1e-3], jnp.float32),
+            "p_max": jnp.full((A,), 10.0, jnp.float32),
+            "lr": jnp.array([0.05, 0.02], jnp.float32)}
+    states0 = zr.shard_state(zr.init_sweep_state(
+        jnp.broadcast_to(chunked, (A,) + chunked.shape)), arms=A)
+    full, _ = zr.run_sweep(states0, batch, arms, 4, key=key)
+    half, _ = zr.run_sweep(states0, batch, arms, 2, key=key)
+    with tempfile.TemporaryDirectory() as td:
+        zr.save_state(td, 2, half, t_next=2)
+        states2, t0 = zr.restore_state(td, arms=A)
+        assert t0 == 2, t0
+        resumed, _ = zr.run_sweep(states2, batch, arms, 2, key=key,
+                                  t0=t0)
+    leaves_equal(full, resumed, "sweep resume")
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_zoo_train_opt_state_ef_parity_8dev():
+    """Tentpole gate (DESIGN.md §17): momentum/adam moments as sharded
+    (n_chunks, D_c) carries and per-worker EF residuals as the
+    (U, n_chunks, D_c) grads-layout carry stay bitwise vs the jitted
+    single-device oracle over 3-round chains on the 4x2 mesh, and a
+    checkpoint saved mid-chain and mid-sweep (moments + residuals +
+    t_next) resumes bit for bit."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", SCRIPT_OPT_STATE_PARITY],
+                       env=env, capture_output=True, text=True,
+                       timeout=560)
+    assert r.returncode == 0, \
+        f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "OK" in r.stdout
 
 
 @pytest.mark.slow

@@ -36,7 +36,7 @@ SECTION_RE = re.compile(r"^##\s+§(\d+)", re.MULTILINE)
 DESIGN_REF_RE = re.compile(r"DESIGN(?:\.md)?\s+§(\d+)((?:[/,]\s*§\d+)*)")
 EXTRA_REF_RE = re.compile(r"§(\d+)")
 # subsystem sections that must stay cited from code (check 4)
-REQUIRED_CITED = {3, 4, 9, 10, 11, 12, 13, 14, 15, 16}
+REQUIRED_CITED = {3, 4, 9, 10, 11, 12, 13, 14, 15, 16, 17}
 
 
 def github_slug(heading: str) -> str:
